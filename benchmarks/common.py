@@ -1,0 +1,24 @@
+"""Shared timing helpers.  All paper-table benchmarks run CPU-scaled
+problem sizes (documented per bench); timings follow the paper's protocol:
+one untimed warm-up call, then the average over N repetitions (A.2)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, reps: int = 20) -> float:
+    """→ seconds per call (mean over reps after one warm-up)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"

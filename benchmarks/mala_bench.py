@@ -1,0 +1,39 @@
+"""Paper Fig 6.2a — MALA DNN surrogate inference.
+
+The MALA-style LDOS MLP lowered through the full LAPIS pipeline and run on
+a batch of 8748 grid points (the paper's atom count), vs the direct jnp
+execution of the same network."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_fn
+
+BATCH = 8748
+
+
+def main(print_rows=True):
+    import jax
+
+    from repro.core import pipeline
+    from repro.models.resnet import init_mala_weights, mala_forward
+
+    rng = np.random.default_rng(0)
+    w = init_mala_weights(rng)
+    x = rng.standard_normal((BATCH, 91)).astype(np.float32)
+
+    mod = pipeline.compile(lambda xx: mala_forward(w, xx), x)
+    direct = jax.jit(lambda xx: mala_forward(w, xx))
+
+    t_lapis = time_fn(mod, x, reps=10)
+    t_direct = time_fn(direct, x, reps=10)
+    out = [row("mala/lapis", t_lapis * 1e6, f"batch={BATCH}"),
+           row("mala/direct", t_direct * 1e6,
+               f"overhead={(t_lapis - t_direct) / t_direct * 100:+.1f}%")]
+    if print_rows:
+        print("\n".join(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

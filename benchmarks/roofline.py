@@ -1,0 +1,71 @@
+"""§Roofline table generator: reads artifacts/dryrun/*.json (written by
+launch/dryrun.py) and emits the per-(arch × shape × mesh) roofline table
+as CSV rows and a markdown table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADER = ("arch,shape,mesh,chips,mem_GiB,compute_s,memory_s,collective_s,"
+          "dominant,useful_ratio")
+
+
+def load(dirname="artifacts/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(f)))
+    return sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r.get("tag", "")))
+
+
+def rows(dirname="artifacts/dryrun"):
+    out = [HEADER]
+    for r in load(dirname):
+        if r["status"] == "skipped":
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,,,SKIP,"
+                       f"({r['reason'][:40]}…)")
+            continue
+        if r["status"] != "ok":
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,,,ERROR,")
+            continue
+        ro = r["roofline"]
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+            f"{r['memory']['total_bytes'] / 2**30:.2f},"
+            f"{ro['compute_s']:.4f},{ro['memory_s']:.3f},"
+            f"{ro['collective_s']:.3f},{ro['dominant']},"
+            f"{ro['useful_flops_ratio']:.2f}")
+    return out
+
+
+def markdown(dirname="artifacts/dryrun") -> str:
+    lines = ["| arch | shape | mesh | mem/dev GiB | compute s | memory s "
+             "| collective s | dominant | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(dirname):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| — | — | — | — | SKIP | — |")
+            continue
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['memory']['total_bytes'] / 2**30:.2f} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.2f} "
+            f"| {ro['collective_s']:.2f} | {ro['dominant']} "
+            f"| {ro['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(print_rows=True):
+    out = rows()
+    if print_rows:
+        print("\n".join(out))
+    return out
+
+
+if __name__ == "__main__":
+    main()

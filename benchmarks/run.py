@@ -1,0 +1,46 @@
+"""Benchmark aggregator — one section per paper table/figure.
+``PYTHONPATH=src python -m benchmarks.run [--skip-slow]``
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma list: gemm,spmv,bgemm,mala,resnet,roofline")
+    args = p.parse_args(argv)
+    which = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (batched_gemm_bench, gemm_bench, mala_bench,
+                            resnet_bench, spmv_bench)
+    from benchmarks import roofline as roofline_bench
+
+    sections = [
+        ("gemm", "Table 6.2 — SGEMM zero-overhead", gemm_bench.main),
+        ("spmv", "Fig 6.1 — SpMV, 4 matrices", spmv_bench.main),
+        ("bgemm", "Fig 6.3 — batched GEMM", batched_gemm_bench.main),
+        ("mala", "Fig 6.2a — MALA DNN inference", mala_bench.main),
+        ("resnet", "Fig 6.2b — ResNet18 inference + DualView ablation",
+         resnet_bench.main),
+        ("roofline", "§Roofline — dry-run derived terms",
+         roofline_bench.main),
+    ]
+    failures = 0
+    for key, title, fn in sections:
+        if which and key not in which:
+            continue
+        print(f"# {title}")
+        try:
+            fn(print_rows=True)
+        except Exception as e:   # noqa: BLE001 — report all sections
+            failures += 1
+            print(f"{key},ERROR,{e!r}", file=sys.stderr)
+        print()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Quickstart: the paper's end-to-end story in 40 lines.
+
+Write a model in plain Python → LAPIS traces it to tensor IR → lowering
+passes pick library calls vs generated kernels and insert the lazy memory
+model → you get (a) an executable, (b) freestanding Python source with the
+weights embedded (the paper's "C++ file with no dependencies besides
+Kokkos").
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ops, pipeline
+from repro.core.options import CompileOptions
+
+rng = np.random.default_rng(0)
+w1 = rng.standard_normal((64, 256), dtype=np.float32) * 0.05
+w2 = rng.standard_normal((256, 10), dtype=np.float32) * 0.05
+
+
+def model(x):
+    h = ops.gelu(ops.matmul(x, ops.constant(w1)))
+    return ops.softmax(ops.matmul(h, ops.constant(w2)))
+
+
+def main():
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+
+    # 1. compile (trace → lapis-opt → lapis-translate)
+    mod = pipeline.compile(model, x,
+                           options=CompileOptions(fuse_elementwise=False))
+    print("=== lowered IR ===")
+    print(mod.print_ir())
+
+    # 2. run it
+    probs = np.asarray(mod(x))
+    print("\noutput:", probs.shape, "row sums:", probs.sum(-1)[:3])
+
+    # 3. emit a freestanding artifact (weights embedded)
+    path = "/tmp/quickstart_generated.py"
+    mod.save_source(path)
+    print(f"\nwrote {path} ({len(open(path).read())} bytes) — "
+          "runs with only jax+numpy installed")
+
+    # 4. prove it: import and execute the generated module
+    import importlib.util
+    spec = importlib.util.spec_from_file_location("generated", path)
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+    probs2 = np.asarray(gen.model(x))
+    np.testing.assert_allclose(probs, probs2, rtol=1e-5, atol=1e-6)
+    print("generated module output matches: OK")
+
+
+if __name__ == "__main__":
+    main()

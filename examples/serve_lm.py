@@ -1,0 +1,39 @@
+"""Batched serving example: prefill + continuous batched decode with an
+optional int8-quantized KV cache (the knob that fits 32k-context decode on
+one pod — EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python examples/serve_lm.py --quantized-kv
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.launch.serve import serve_loop
+from repro.models.model import build_model
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen2-1.5b")
+    p.add_argument("--requests", type=int, default=6)
+    p.add_argument("--batch", type=int, default=3)
+    p.add_argument("--prompt-len", type=int, default=24)
+    p.add_argument("--gen-len", type=int, default=16)
+    p.add_argument("--quantized-kv", action="store_true")
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = steps_mod.cast_compute(model.init(0), cfg.compute_dtype)
+    out = serve_loop(model, params, n_requests=args.requests,
+                     batch=args.batch, prompt_len=args.prompt_len,
+                     gen_len=args.gen_len, quantized=args.quantized_kv)
+    print(f"[example] served {out['requests']} requests "
+          f"({out['tokens']} tokens) at {out['tok_per_s']:.1f} tok/s "
+          f"(kv cache: {'int8' if args.quantized_kv else 'bf16'})")
+
+
+if __name__ == "__main__":
+    main()

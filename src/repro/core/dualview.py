@@ -1,0 +1,244 @@
+"""LAPIS::DualView runtime (paper §4.3), adapted to numpy/jax.
+
+A DualView manages a buffer that may be used on both host (numpy) and device
+(jax.Array).  Each side carries a *modified* flag; ``sync_host`` /
+``sync_device`` copy **lazily** — only when the opposite side has
+unsynchronized modifications.  When no transfer is needed the cost of a sync
+is one boolean check (the paper's headline property).
+
+Subviews ("children") alias the parent's buffer: they own no storage and
+dereference the root's buffers through their slice.  As in the paper,
+children share modified flags with their root so multiple children stay
+consistent, and ``sync`` on a child syncs its parent.  Root allocations are
+kept alive by ordinary Python references (the std::shared_ptr analogue).
+
+This is not just a demo type: the checkpoint writer stages device→host
+through DualViews, so an unchanged array (e.g. frozen embeddings or an
+untouched optimizer slot) costs zero copies per checkpoint.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+# module-level transfer counters (tests + benchmarks read these)
+TRANSFERS = {"h2d": 0, "d2h": 0, "sync_calls": 0}
+
+
+def reset_transfer_stats() -> None:
+    TRANSFERS.update(h2d=0, d2h=0, sync_calls=0)
+
+
+class _Flags:
+    """Shared modified-flags object (root-owned; children alias it)."""
+
+    __slots__ = ("modified_host", "modified_device")
+
+    def __init__(self):
+        self.modified_host = False
+        self.modified_device = False
+
+
+class DualView:
+    """host/device mirrored buffer with lazy flag-driven synchronization."""
+
+    def __init__(self, host: Optional[np.ndarray] = None,
+                 device: Optional[jax.Array] = None, name: str = ""):
+        if host is None and device is None:
+            raise ValueError("DualView needs at least one side")
+        self._host = host
+        self._device = device
+        self.parent: Optional["DualView"] = None
+        self._slice: Tuple = ()
+        self.name = name
+        self._flags = _Flags()
+        if host is not None and device is None:
+            self._flags.modified_host = True
+        elif device is not None and host is None:
+            self._flags.modified_device = True
+
+    # -- construction helpers -------------------------------------------------
+    @classmethod
+    def from_host(cls, arr, name: str = "") -> "DualView":
+        return cls(host=np.asarray(arr), name=name)
+
+    @classmethod
+    def from_device(cls, arr: jax.Array, name: str = "") -> "DualView":
+        return cls(device=arr, name=name)
+
+    def _root(self) -> "DualView":
+        dv = self
+        while dv.parent is not None:
+            dv = dv.parent
+        return dv
+
+    @property
+    def is_child(self) -> bool:
+        return self.parent is not None
+
+    # -- shape/dtype ------------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        root = self._root()
+        base = root._host if root._host is not None else root._device
+        if not self.is_child:
+            return tuple(base.shape)
+        # slice shape without materializing: index a zero-stride dummy
+        return tuple(np.broadcast_to(np.empty((), base.dtype),
+                                     base.shape)[self._slice].shape)
+
+    @property
+    def dtype(self):
+        root = self._root()
+        side = root._host if root._host is not None else root._device
+        return side.dtype
+
+    # -- flags --------------------------------------------------------------------
+    @property
+    def modified_host(self) -> bool:
+        return self._flags.modified_host if not self.is_child \
+            else self._root()._flags.modified_host
+
+    @property
+    def modified_device(self) -> bool:
+        return self._flags.modified_device if not self.is_child \
+            else self._root()._flags.modified_device
+
+    def modify_host(self) -> None:
+        """Mark the host side modified (paper: kokkos.modify)."""
+        self._root()._flags.modified_host = True
+
+    def modify_device(self) -> None:
+        self._root()._flags.modified_device = True
+
+    # -- materialization -------------------------------------------------------------
+    def _ensure_host(self) -> None:
+        assert not self.is_child
+        if self._host is None:
+            self._host = np.array(self._device)  # writable copy
+            TRANSFERS["d2h"] += 1
+
+    def _ensure_device(self) -> None:
+        assert not self.is_child
+        if self._device is None:
+            self._device = jax.device_put(self._host)
+            TRANSFERS["h2d"] += 1
+
+    # -- the lazy syncs (the paper's core mechanism) -----------------------------------
+    def sync_device(self) -> None:
+        """Make the device side current.  Copies host→device only if the
+        host has unsynchronized modifications; otherwise one flag check.
+        Child syncs delegate to the root (paper: child sync → parent sync)."""
+        TRANSFERS["sync_calls"] += 1
+        root = self._root()
+        if root._flags.modified_host or root._device is None:
+            root._ensure_host()
+            root._device = jax.device_put(root._host)
+            TRANSFERS["h2d"] += 1
+            root._flags.modified_host = False
+
+    def sync_host(self) -> None:
+        TRANSFERS["sync_calls"] += 1
+        root = self._root()
+        if root._flags.modified_device or root._host is None:
+            if root._device is not None:
+                root._host = np.array(root._device)  # writable copy
+                TRANSFERS["d2h"] += 1
+            root._flags.modified_device = False
+
+    # -- accessors -----------------------------------------------------------------------
+    def host_view(self) -> np.ndarray:
+        """Host buffer view (no sync — caller syncs for freshness).  Child
+        views are true numpy aliases of the root's buffer."""
+        root = self._root()
+        root._ensure_host()
+        return root._host[self._slice] if self.is_child else root._host
+
+    def device_view(self) -> jax.Array:
+        root = self._root()
+        root._ensure_device()
+        return root._device[self._slice] if self.is_child else root._device
+
+    def host(self) -> np.ndarray:
+        """sync_host + host_view."""
+        self.sync_host()
+        return self.host_view()
+
+    def device(self) -> jax.Array:
+        self.sync_device()
+        return self.device_view()
+
+    # -- writes ------------------------------------------------------------------------------
+    def set_host(self, value) -> None:
+        """In-place host write through the (possibly aliased) view, then
+        mark modified — multiple children of one parent see each other's
+        writes immediately, as in the paper."""
+        root = self._root()
+        if self.is_child:
+            # read-modify-write: pull pending device changes first
+            self.sync_host()
+            root._ensure_host()
+            root._host[self._slice] = value
+        else:
+            root._ensure_host()
+            root._host[...] = value
+            # whole-buffer replacement supersedes pending device state
+            root._flags.modified_device = False
+        self.modify_host()
+
+    def set_device(self, value: jax.Array) -> None:
+        root = self._root()
+        if self.is_child:
+            # read-modify-write of the root buffer: bring the device side
+            # current first (else pending host writes would clobber this
+            # update on the next sync_device)
+            self.sync_device()
+            root._ensure_device()
+            root._device = root._device.at[self._slice].set(value)
+        else:
+            root._device = jax.device_put(value) \
+                if not isinstance(value, jax.Array) else value
+            # whole-buffer replacement supersedes any pending host state
+            root._flags.modified_host = False
+        self.modify_device()
+
+    # -- subviews -------------------------------------------------------------------------------
+    def subview(self, slc: Union[slice, Tuple, int],
+                name: str = "") -> "DualView":
+        """An aliasing child view (paper §4.3: parent/child tree, shared
+        flags, refcounted lifetime).  Children of children are supported;
+        all share the root's flags."""
+        child = DualView.__new__(DualView)
+        child._host = None
+        child._device = None
+        child.parent = self
+        child.name = name or f"{self.name}[sub]"
+        child._flags = self._root()._flags
+        if isinstance(slc, tuple):
+            base = self._slice
+            child._slice = base + slc if base else slc
+        else:
+            child._slice = self._slice + (slc,)
+        return child
+
+    def __repr__(self) -> str:
+        root = self._root()
+        side = "host" if root._host is not None else ""
+        side += "+device" if root._device is not None else ""
+        kind = "child" if self.is_child else side
+        return (f"DualView({self.name or hex(id(self))}, "
+                f"{kind}, mh={self.modified_host}, "
+                f"md={self.modified_device})")
+
+
+def tree_sync_host(tree) -> int:
+    """sync_host every DualView leaf in a pytree; returns #actual copies.
+    This is what the checkpoint writer calls — lazy d2h staging."""
+    before = TRANSFERS["d2h"]
+    for leaf in jax.tree_util.tree_leaves(
+            tree, is_leaf=lambda x: isinstance(x, DualView)):
+        if isinstance(leaf, DualView):
+            leaf.sync_host()
+    return TRANSFERS["d2h"] - before

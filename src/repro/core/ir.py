@@ -1,0 +1,264 @@
+"""SSA tensor IR — the repro analogue of MLIR's linalg-on-tensors level.
+
+The IR is deliberately MLIR-shaped: a ``Graph`` (≈ func.func) holds ``Op``s in
+SSA form over ``Value``s typed by ``TensorType``.  Ops are namespaced into
+dialects (``linalg.*`` high-level tensor ops, ``kk.*`` Kokkos-Kernels-style
+library calls, ``loops.*`` mid-level parallel loop nests, ``tpu.*`` the
+TPU-adapted Kokkos dialect).  Passes rewrite ops in place; the emitter walks
+the final graph and produces an executable JAX callable and/or Python source.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+
+class MemorySpace(enum.Enum):
+    """Kokkos-inspired memory spaces, adapted to the TPU hierarchy.
+
+    ANY    — unassigned (pre-dualview-pass).
+    HOST   — host DRAM (numpy side of a DualView).
+    DEVICE — accelerator HBM.
+    DUAL   — mirrored host+device buffer with lazy sync (LAPIS::DualView).
+    VMEM   — on-chip vector memory (Pallas block operand).
+    SMEM   — scalar memory (Pallas scalar prefetch operands).
+    """
+
+    ANY = "any"
+    HOST = "host"
+    DEVICE = "device"
+    DUAL = "dual"
+    VMEM = "vmem"
+    SMEM = "smem"
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorType:
+    shape: tuple
+    dtype: str
+    memory_space: MemorySpace = MemorySpace.ANY
+    # Optional sparse encoding, e.g. "csr_values"/"csr_indptr"/"csr_indices".
+    encoding: Optional[str] = None
+
+    def __str__(self) -> str:
+        dims = "x".join(str(d) for d in self.shape) if self.shape else "scalar"
+        s = f"tensor<{dims}x{self.dtype}"
+        if self.encoding:
+            s += f", {self.encoding}"
+        if self.memory_space is not MemorySpace.ANY:
+            s += f", #{self.memory_space.value}"
+        return s + ">"
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, initial=1)) * np.dtype(
+            _np_dtype(self.dtype)
+        ).itemsize
+
+    def with_space(self, space: MemorySpace) -> "TensorType":
+        return dataclasses.replace(self, memory_space=space)
+
+
+def _np_dtype(dtype: str):
+    return {"bf16": np.float32, "f32": np.float32}.get(dtype, dtype)
+
+
+_value_counter = [0]
+
+
+class Value:
+    """An SSA value."""
+
+    __slots__ = ("id", "type", "producer", "name")
+
+    def __init__(self, type: TensorType, producer: Optional["Op"] = None,
+                 name: Optional[str] = None):
+        _value_counter[0] += 1
+        self.id = _value_counter[0]
+        self.type = type
+        self.producer = producer
+        self.name = name
+
+    def __repr__(self) -> str:
+        return f"%{self.name or self.id}"
+
+    @property
+    def shape(self) -> tuple:
+        return self.type.shape
+
+    @property
+    def dtype(self) -> str:
+        return self.type.dtype
+
+
+class Op:
+    """An IR operation: ``results = opname(operands) {attrs}`` (+ regions)."""
+
+    __slots__ = ("opname", "operands", "attrs", "results", "regions")
+
+    def __init__(self, opname: str, operands: Sequence[Value],
+                 result_types: Sequence[TensorType],
+                 attrs: Optional[dict] = None,
+                 regions: Optional[list] = None):
+        self.opname = opname
+        self.operands = list(operands)
+        self.attrs = dict(attrs or {})
+        self.results = [Value(t, producer=self) for t in result_types]
+        self.regions = list(regions or [])
+
+    @property
+    def dialect(self) -> str:
+        return self.opname.split(".", 1)[0]
+
+    def __repr__(self) -> str:
+        res = ", ".join(map(repr, self.results))
+        ops = ", ".join(map(repr, self.operands))
+        s = f"{res} = {self.opname}({ops})" if self.results else \
+            f"{self.opname}({ops})"
+        if self.attrs:
+            printable = {k: v for k, v in self.attrs.items()
+                         if not callable(v) and not isinstance(v, np.ndarray)}
+            if printable:
+                s += " {" + ", ".join(f"{k}={v!r}" for k, v in
+                                      sorted(printable.items())) + "}"
+        return s
+
+
+class Graph:
+    """A function-level container of ops in SSA order (≈ func.func)."""
+
+    def __init__(self, name: str, inputs: Sequence[Value],
+                 ops: Optional[list] = None,
+                 outputs: Optional[list] = None):
+        self.name = name
+        self.inputs = list(inputs)
+        self.ops: list[Op] = list(ops or [])
+        self.outputs: list[Value] = list(outputs or [])
+
+    # -- construction -------------------------------------------------------
+    def add(self, op: Op) -> Op:
+        self.ops.append(op)
+        return op
+
+    # -- traversal ----------------------------------------------------------
+    def walk(self) -> Iterable[Op]:
+        for op in self.ops:
+            yield op
+            for region in op.regions:
+                yield from region.walk()
+
+    def values(self) -> Iterable[Value]:
+        seen = set()
+        for v in self.inputs:
+            if v.id not in seen:
+                seen.add(v.id)
+                yield v
+        for op in self.walk():
+            for v in op.results:
+                if v.id not in seen:
+                    seen.add(v.id)
+                    yield v
+
+    def users(self) -> dict:
+        """value.id -> list of (op, operand_index) using it (incl. regions)."""
+        out: dict = {}
+        for op in self.walk():
+            for i, v in enumerate(op.operands):
+                out.setdefault(v.id, []).append((op, i))
+        for i, v in enumerate(self.outputs):
+            out.setdefault(v.id, []).append((None, i))
+        return out
+
+    def replace_op(self, old: Op, new_ops: Sequence[Op],
+                   value_map: dict) -> None:
+        """Replace ``old`` with ``new_ops``; rewire uses via ``value_map``
+        (old Value -> new Value)."""
+        idx = self.ops.index(old)
+        self.ops[idx:idx + 1] = list(new_ops)
+        self._rewire(value_map)
+
+    def _rewire(self, value_map: dict) -> None:
+        mapping = {ov.id: nv for ov, nv in value_map.items()}
+        for op in self.walk():
+            op.operands = [mapping.get(v.id, v) for v in op.operands]
+        self.outputs = [mapping.get(v.id, v) for v in self.outputs]
+
+    def dce(self) -> int:
+        """Dead code elimination; returns number of removed ops."""
+        removed = 0
+        changed = True
+        while changed:
+            changed = False
+            used = {v.id for v in self.outputs}
+            for op in self.walk():
+                for v in op.operands:
+                    used.add(v.id)
+            keep = []
+            for op in self.ops:
+                side_effecting = op.opname in SIDE_EFFECTING_OPS
+                if side_effecting or any(r.id in used for r in op.results):
+                    keep.append(op)
+                else:
+                    removed += 1
+                    changed = True
+            self.ops = keep
+        return removed
+
+    # -- printing -----------------------------------------------------------
+    def __str__(self) -> str:
+        lines = []
+        args = ", ".join(f"{v!r}: {v.type}" for v in self.inputs)
+        lines.append(f"func @{self.name}({args}) {{")
+        for op in self.ops:
+            lines.extend(_print_op(op, indent=1))
+        outs = ", ".join(map(repr, self.outputs))
+        lines.append(f"  return {outs}")
+        lines.append("}")
+        return "\n".join(lines)
+
+
+def _print_op(op: Op, indent: int):
+    pad = "  " * indent
+    lines = [pad + repr(op)]
+    for region in op.regions:
+        args = ", ".join(f"{v!r}: {v.type}" for v in region.inputs)
+        lines.append(pad + f"  region ({args}) {{")
+        for inner in region.ops:
+            lines.extend(_print_op(inner, indent + 2))
+        outs = ", ".join(map(repr, region.outputs))
+        lines.append(pad + f"    yield {outs}")
+        lines.append(pad + "  }")
+    return lines
+
+
+# Ops that must never be DCE'd (memory-model bookkeeping).
+SIDE_EFFECTING_OPS = {"tpu.sync", "tpu.modify", "loops.store_tile"}
+
+
+# --------------------------------------------------------------------------
+# Dialect op sets (used by passes to decide what they own).
+# --------------------------------------------------------------------------
+LINALG_MATMUL_LIKE = {
+    "linalg.matmul", "linalg.batch_matmul", "linalg.gemv", "linalg.dot",
+}
+LINALG_ELEMENTWISE = {
+    "linalg.map",       # generic elementwise with attrs["fn"] (python name)
+    "linalg.add", "linalg.sub", "linalg.mul", "linalg.div", "linalg.maximum",
+    "linalg.relu", "linalg.gelu", "linalg.silu", "linalg.sigmoid",
+    "linalg.tanh", "linalg.exp", "linalg.neg", "linalg.sqrt", "linalg.rsqrt",
+    "linalg.power",
+}
+LINALG_REDUCTION = {"linalg.reduce_sum", "linalg.reduce_max", "linalg.mean",
+                    "linalg.softmax"}
+LINALG_SPARSE = {"linalg.spmv_csr"}
+LINALG_SHAPE = {"tensor.reshape", "tensor.transpose", "tensor.slice",
+                "tensor.concat", "tensor.broadcast", "tensor.cast",
+                "tensor.constant", "tensor.pad", "tensor.gather"}
+KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv",
+          "kk.attention", "kk.rwkv6_scan", "kk.rglru_scan", "kk.conv2d",
+          "kk.fused_elementwise"}
+LOOPS_OPS = {"loops.parallel", "loops.sequential_scan"}
+TPU_OPS = {"tpu.grid_parallel", "tpu.sync", "tpu.modify"}

@@ -1,0 +1,290 @@
+"""The tensor-dialect op surface — repro's linalg-on-tensors builders.
+
+Every function here is dual-mode:
+
+* **tracing** (inside ``core.tracer.trace``) — records a ``linalg.*`` /
+  ``tensor.*`` op into the Graph (the paper's torch-mlir → linalg-on-tensors
+  ingestion), with result types inferred from the pure-jnp reference.
+* **eager** — executes the reference directly (for ``kk.*``-backed hot ops,
+  via the registry so the library-vs-Pallas decision of
+  ``linalg-to-kokkoskernels`` applies even outside the pipeline).
+
+This is how the 10 assigned architectures flow "through" the LAPIS stack:
+their blocks call these functions, and the same code path is traceable into
+the IR for the compiler-pipeline demos.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tracer
+from repro.core.ir import MemorySpace, Op, TensorType
+from repro.core.tracer import TracedValue, as_traced, emit, tracing
+
+Array = Union[jax.Array, TracedValue]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _eager(x):
+    return x
+
+
+def _unary(opname: str, ref):
+    def fn(x):
+        if tracing():
+            return emit(opname, [x], ref)
+        return ref(x)
+    fn.__name__ = opname.split(".", 1)[1]
+    return fn
+
+
+def _binary(opname: str, ref):
+    def fn(a, b):
+        if tracing():
+            return emit(opname, [a, b], ref)
+        return ref(a, b)
+    fn.__name__ = opname.split(".", 1)[1]
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# elementwise (linalg.*)
+# ---------------------------------------------------------------------------
+add = _binary("linalg.add", jnp.add)
+sub = _binary("linalg.sub", jnp.subtract)
+mul = _binary("linalg.mul", jnp.multiply)
+div = _binary("linalg.div", jnp.divide)
+maximum = _binary("linalg.maximum", jnp.maximum)
+
+relu = _unary("linalg.relu", jax.nn.relu)
+gelu = _unary("linalg.gelu", partial(jax.nn.gelu, approximate=True))
+silu = _unary("linalg.silu", jax.nn.silu)
+sigmoid = _unary("linalg.sigmoid", jax.nn.sigmoid)
+tanh = _unary("linalg.tanh", jnp.tanh)
+exp = _unary("linalg.exp", jnp.exp)
+neg = _unary("linalg.neg", jnp.negative)
+sqrt = _unary("linalg.sqrt", jnp.sqrt)
+rsqrt = _unary("linalg.rsqrt", jax.lax.rsqrt)
+
+
+def power(x, p):
+    ref = lambda a: jnp.power(a, p)
+    if tracing():
+        return emit("linalg.power", [x], ref, attrs={"exponent": p})
+    return ref(x)
+
+
+# ---------------------------------------------------------------------------
+# reductions
+# ---------------------------------------------------------------------------
+
+def _reduction(opname: str, jref):
+    def fn(x, axis=None, keepdims=False):
+        ref = lambda a: jref(a, axis=axis, keepdims=keepdims)
+        if tracing():
+            return emit(opname, [x], ref,
+                        attrs={"axis": axis, "keepdims": keepdims})
+        return ref(x)
+    fn.__name__ = opname.split(".", 1)[1]
+    return fn
+
+
+reduce_sum = _reduction("linalg.reduce_sum", jnp.sum)
+reduce_max = _reduction("linalg.reduce_max", jnp.max)
+mean = _reduction("linalg.mean", jnp.mean)
+
+
+def softmax(x, axis=-1):
+    ref = lambda a: jax.nn.softmax(a, axis=axis)
+    if tracing():
+        return emit("linalg.softmax", [x], ref, attrs={"axis": axis})
+    return ref(x)
+
+
+# ---------------------------------------------------------------------------
+# shape ops (tensor.*)
+# ---------------------------------------------------------------------------
+
+def reshape(x, shape):
+    shape = tuple(int(s) for s in shape)
+    ref = lambda a: jnp.reshape(a, shape)
+    if tracing():
+        return emit("tensor.reshape", [x], ref, attrs={"shape": shape})
+    return ref(x)
+
+
+def transpose(x, perm=None):
+    ref = lambda a: jnp.transpose(a, perm)
+    if tracing():
+        return emit("tensor.transpose", [x], ref, attrs={"perm": perm})
+    return ref(x)
+
+
+def cast(x, dtype):
+    dtype = jnp.dtype(dtype)
+    ref = lambda a: a.astype(dtype)
+    if tracing():
+        return emit("tensor.cast", [x], ref, attrs={"dtype": dtype.name})
+    return ref(x)
+
+
+def slice_(x, starts, sizes):
+    starts, sizes = tuple(starts), tuple(sizes)
+    ref = lambda a: jax.lax.dynamic_slice(a, starts, sizes)
+    if tracing():
+        return emit("tensor.slice", [x], ref,
+                    attrs={"starts": starts, "sizes": sizes})
+    return ref(x)
+
+
+def concat(xs, axis=0):
+    ref = lambda *a: jnp.concatenate(a, axis=axis)
+    if tracing():
+        return emit("tensor.concat", list(xs), ref, attrs={"axis": axis})
+    return ref(*xs)
+
+
+def broadcast_to(x, shape):
+    shape = tuple(shape)
+    ref = lambda a: jnp.broadcast_to(a, shape)
+    if tracing():
+        return emit("tensor.broadcast", [x], ref, attrs={"shape": shape})
+    return ref(x)
+
+
+def pad(x, pads, value=0.0):
+    """pads: [(lo, hi), ...] per dim."""
+    pads = tuple((int(l), int(h)) for l, h in pads)
+    ref = lambda a: jnp.pad(a, pads, constant_values=value)
+    if tracing():
+        return emit("tensor.pad", [x], ref,
+                    attrs={"pads": pads, "value": value})
+    return ref(x)
+
+
+def gather(x, idx, axis=0):
+    ref = lambda a, i: jnp.take(a, i, axis=axis)
+    if tracing():
+        return emit("tensor.gather", [x, idx], ref, attrs={"axis": axis})
+    return ref(x, idx)
+
+
+def constant(value):
+    if tracing():
+        return tracer.lift_constant(value)
+    return jnp.asarray(value)
+
+
+# ---------------------------------------------------------------------------
+# linear algebra (linalg.* — lowered to kk.* by linalg-to-kokkoskernels)
+# ---------------------------------------------------------------------------
+
+def _registry_call(kk_opname: str, *args, **kwargs):
+    from repro.core import registry
+    fn = registry.dispatch(kk_opname)
+    return fn(*args, **kwargs)
+
+
+def matmul(a, b):
+    """2D×2D → linalg.matmul; (≥3D)×(≥2D) batched → linalg.batch_matmul."""
+    a_nd = a.ndim if hasattr(a, "ndim") else np.ndim(a)
+    b_nd = b.ndim if hasattr(b, "ndim") else np.ndim(b)
+    if a_nd == 2 and b_nd == 2:
+        ref = jnp.matmul
+        if tracing():
+            return emit("linalg.matmul", [a, b], ref)
+        return _registry_call("kk.gemm", a, b)
+    if a_nd == 2 and b_nd == 1:
+        return gemv(a, b)
+    ref = jnp.matmul
+    if tracing():
+        return emit("linalg.batch_matmul", [a, b], ref)
+    return _registry_call("kk.batched_gemm", a, b)
+
+
+def gemv(a, x):
+    ref = jnp.matmul
+    if tracing():
+        return emit("linalg.gemv", [a, x], ref)
+    return _registry_call("kk.gemv", a, x)
+
+
+def dot(a, b):
+    ref = jnp.dot
+    if tracing():
+        return emit("linalg.dot", [a, b], ref)
+    return ref(a, b)
+
+
+def spmv_csr(indptr, indices, values, x, *, n_rows: int,
+             nnz_mean: Optional[float] = None):
+    """CSR sparse matrix-vector product y = A @ x.
+
+    ``nnz_mean`` feeds the paper's vector-length heuristic (§4.2): the
+    average entries-per-row estimate that sizes the inner parallel loop.
+    """
+    def ref(ip, ind, val, xv):
+        # gather/segment-sum reference (pure jnp)
+        row_ids = jnp.cumsum(
+            jnp.zeros(val.shape[0], jnp.int32).at[ip[1:-1]].add(1))
+        contrib = val * xv[ind]
+        return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
+
+    if tracing():
+        return emit("linalg.spmv_csr", [indptr, indices, values, x], ref,
+                    attrs={"n_rows": n_rows, "nnz_mean": nnz_mean})
+    return _registry_call("kk.spmv", indptr, indices, values, x,
+                          n_rows=n_rows)
+
+
+def conv2d(x, w, *, stride=(1, 1), padding="SAME"):
+    """NCHW conv (ResNet frontends). Lowered to lax.conv (the XLA library
+    path) — the TPU analogue of calling cuDNN from Kokkos Kernels."""
+    def ref(xx, ww):
+        return jax.lax.conv_general_dilated(
+            xx, ww, window_strides=stride, padding=padding,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    if tracing():
+        return emit("kk.conv2d", [x, w], ref,
+                    attrs={"stride": stride, "padding": padding})
+    return ref(x, w)
+
+
+def max_pool2d(x, *, window=(3, 3), stride=(2, 2), padding="SAME"):
+    def ref(xx):
+        return jax.lax.reduce_window(
+            xx, -jnp.inf, jax.lax.max,
+            (1, 1) + tuple(window), (1, 1) + tuple(stride), padding)
+    if tracing():
+        return emit("linalg.max_pool2d", [x], ref,
+                    attrs={"window": window, "stride": stride,
+                           "padding": padding})
+    return ref(x)
+
+
+def avg_pool_global(x):
+    """Global average pool over H,W of NCHW."""
+    ref = lambda xx: jnp.mean(xx, axis=(2, 3))
+    if tracing():
+        return emit("linalg.avg_pool_global", [x], ref)
+    return ref(x)
+
+
+def batch_norm_inference(x, scale, bias, mean_, var, eps=1e-5):
+    """Folded inference-mode batchnorm over channel dim 1 of NCHW."""
+    def ref(xx, s, b, m, v):
+        inv = s * jax.lax.rsqrt(v + eps)
+        return xx * inv[None, :, None, None] + (
+            b - m * inv)[None, :, None, None]
+    if tracing():
+        return emit("linalg.batch_norm", [x, scale, bias, mean_, var], ref,
+                    attrs={"eps": eps})
+    return ref(x, scale, bias, mean_, var)

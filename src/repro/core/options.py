@@ -1,0 +1,65 @@
+"""Compile options — the repro analogue of LAPIS's pipeline flags.
+
+``target`` selects the execution backend the same way LAPIS selects a Kokkos
+backend at compile time:
+
+* ``"xla"``      — lower matmul-like ops to library calls (XLA dot_general —
+                   the TPU "vendor library", cuBLAS analogue) and everything
+                   else to fused jnp; this is ``linalg-to-kokkoskernels``.
+* ``"pallas"``   — lower hot ops to our Pallas kernels (the pure-Kokkos
+                   lowering path of the paper). On CPU this implies
+                   ``interpret=True`` unless overridden.
+* ``"auto"``     — per-op heuristic choice (library for the ops known to be
+                   hand-optimized, Pallas/loops for the rest) — the paper's
+                   default pipeline behaviour.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class CompileOptions:
+    target: str = "auto"                 # "xla" | "pallas" | "auto"
+    interpret: Optional[bool] = None     # None -> True iff no TPU present
+    prefer_library: bool = True          # linalg-to-kokkoskernels on/off
+    fuse_elementwise: bool = True        # beyond-paper fusion pass
+    lazy_dualview: bool = True           # paper's lazy sync (False = eager
+                                         # copies, the baseline-MLIR mode)
+    embed_constants: bool = True         # weights embedded in emitted source
+    vmem_limit_bytes: int = 96 * 2**20   # usable VMEM per core (v5e ~128MiB)
+    lane_width: int = 128                # TPU lane width (paper: warp 32)
+    sublane_width: int = 8
+    mxu_dim: int = 128                   # MXU systolic array edge
+    donate_buffers: bool = True
+
+    def resolve_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+_tls = threading.local()
+
+
+def current_options() -> CompileOptions:
+    opts = getattr(_tls, "options", None)
+    return opts if opts is not None else _DEFAULT
+
+
+_DEFAULT = CompileOptions()
+
+
+@contextlib.contextmanager
+def use_options(options: CompileOptions):
+    prev = getattr(_tls, "options", None)
+    _tls.options = options
+    try:
+        yield options
+    finally:
+        _tls.options = prev

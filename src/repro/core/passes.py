@@ -1,0 +1,401 @@
+"""The LAPIS lowering pipeline, adapted to TPU (paper §4, Table 4.2).
+
+Pass order (mirrors the paper's pipeline):
+
+1. ``fuse_elementwise``        [beyond paper] chain-fuse elementwise ops.
+2. ``linalg_to_library``       [linalg-to-kokkoskernels] matmul/gemv/spmv →
+                               ``kk.*`` library-call ops.
+3. ``linalg_to_loops``         [dense-linalg-to-parallel-loops] remaining
+                               dense ops → ``loops.parallel`` nests.
+4. ``tile_mapping``            [kokkos-loop-mapping] map loop nests onto the
+                               TPU hierarchy (grid / VMEM block / 128-lane
+                               vector) and compute *heuristic* block shapes —
+                               the team-size / vector-length analogue.
+5. ``dualview_management``     [kokkos-dualview-management] assign memory
+                               spaces and insert lazy ``tpu.sync`` /
+                               ``tpu.modify`` ops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core import refs
+from repro.core.ir import (Graph, LINALG_ELEMENTWISE, LINALG_MATMUL_LIKE,
+                           LINALG_REDUCTION, MemorySpace, Op, TensorType)
+from repro.core.options import CompileOptions, current_options
+
+# ---------------------------------------------------------------------------
+# 1. elementwise fusion (beyond paper — XLA-style producer/consumer fusion)
+# ---------------------------------------------------------------------------
+
+_FUSABLE = LINALG_ELEMENTWISE | {"kk.fused_elementwise"}
+
+
+def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
+                     ) -> int:
+    """Fuse producer→consumer chains of elementwise ops where the
+    intermediate value has exactly one use.  Returns #fusions performed."""
+    options = options or current_options()
+    if not options.fuse_elementwise:
+        return 0
+    fused = 0
+    changed = True
+    while changed:
+        changed = False
+        users = graph.users()
+        for op in graph.ops:
+            if op.opname not in _FUSABLE:
+                continue
+            uses = users.get(op.results[0].id, [])
+            if len(uses) != 1:
+                continue
+            user_op, operand_idx = uses[0]
+            if user_op is None or user_op.opname not in _FUSABLE:
+                continue
+            if user_op.results[0].shape != op.results[0].shape:
+                continue  # only same-shape chains (no broadcast re-analysis)
+            _fuse_pair(graph, op, user_op, operand_idx)
+            fused += 1
+            changed = True
+            break
+    return fused
+
+
+def _fuse_pair(graph: Graph, producer: Op, consumer: Op,
+               operand_idx: int) -> None:
+    p_fn = refs.op_ref(producer.opname, producer.attrs)
+    c_fn = refs.op_ref(consumer.opname, consumer.attrs)
+    n_p = len(producer.operands)
+
+    def fn(*args, _p=p_fn, _c=c_fn, _np=n_p, _i=operand_idx):
+        mid = _p(*args[:_np])
+        c_args = list(args[_np:])
+        c_args.insert(_i, mid)
+        return _c(*c_args)
+
+    operands = list(producer.operands) + [
+        v for j, v in enumerate(consumer.operands) if j != operand_idx]
+    new = Op("kk.fused_elementwise", operands,
+             [consumer.results[0].type],
+             attrs={"fn": fn,
+                    "ops": (producer.attrs.get("ops", (producer.opname,)) +
+                            consumer.attrs.get("ops", (consumer.opname,)))})
+    # place the fused op at the consumer's position, drop the producer
+    graph.ops[graph.ops.index(consumer)] = new
+    graph.ops.remove(producer)
+    graph._rewire({consumer.results[0]: new.results[0]})
+
+
+# ---------------------------------------------------------------------------
+# 2. linalg-to-kokkoskernels
+# ---------------------------------------------------------------------------
+
+_TO_KK = {
+    "linalg.matmul": "kk.gemm",
+    "linalg.batch_matmul": "kk.batched_gemm",
+    "linalg.gemv": "kk.gemv",
+    "linalg.spmv_csr": "kk.spmv",
+}
+
+
+def linalg_to_library(graph: Graph,
+                      options: Optional[CompileOptions] = None) -> int:
+    """Replace recognized linear-algebra ops with ``kk.*`` library-call ops
+    (paper: linalg.matmul → kokkos.gemm).  The registry later decides, per
+    op, whether the library ("xla") or the custom-kernel ("pallas")
+    implementation runs — LAPIS's choice of KokkosBlas vs generated loops."""
+    options = options or current_options()
+    replaced = 0
+    for op in list(graph.ops):
+        kk = _TO_KK.get(op.opname)
+        if kk is None:
+            continue
+        new = Op(kk, op.operands, [r.type for r in op.results],
+                 attrs=dict(op.attrs))
+        graph.replace_op(op, [new],
+                         dict(zip(op.results, new.results)))
+        replaced += 1
+    return replaced
+
+
+# ---------------------------------------------------------------------------
+# 3. dense-linalg-to-parallel-loops
+# ---------------------------------------------------------------------------
+
+_LOOPABLE = LINALG_ELEMENTWISE | LINALG_REDUCTION | {"kk.fused_elementwise"}
+
+
+def linalg_to_loops(graph: Graph,
+                    options: Optional[CompileOptions] = None) -> int:
+    """Lower remaining dense elementwise/reduction ops to ``loops.parallel``
+    nests over their iteration space.  Only runs for the ``pallas`` target —
+    under ``xla``/``auto`` these ops stay at tensor level where XLA's own
+    fusion is the better "backend" (the paper keeps such choices per-target
+    too: OpenMP vs CUDA lowerings differ)."""
+    options = options or current_options()
+    if options.target != "pallas":
+        return 0
+    lowered = 0
+    for op in list(graph.ops):
+        if op.opname not in _LOOPABLE:
+            continue
+        if op.opname in LINALG_REDUCTION:
+            # only shape-preserving row reductions (softmax over the last
+            # dim) lower to blocked loops — the reduced axis must fit one
+            # VMEM block and in/out blocks must agree (paper: loops whose
+            # structure the mapping can't prove stay at the higher level)
+            if op.opname != "linalg.softmax":
+                continue
+            axis = op.attrs.get("axis", -1)
+            ndim = len(op.operands[0].type.shape)
+            if axis not in (-1, ndim - 1) or \
+                    op.operands[0].type.shape[-1] > 1024:
+                continue
+            kind = "reduce"
+        else:
+            kind = "map"
+        if any(o.type.shape != op.operands[0].type.shape
+               for o in op.operands):
+            continue  # broadcasting nests stay at tensor level
+        fn = refs.op_ref(op.opname, op.attrs)
+        new = Op("loops.parallel", op.operands,
+                 [r.type for r in op.results],
+                 attrs={"kind": kind, "fn": fn, "src": op.opname,
+                        "iter_space": tuple(op.results[0].type.shape),
+                        **{k: v for k, v in op.attrs.items()
+                           if k in ("axis", "keepdims")}})
+        graph.replace_op(op, [new], dict(zip(op.results, new.results)))
+        lowered += 1
+    return lowered
+
+
+# ---------------------------------------------------------------------------
+# 4. kokkos-loop-mapping → TPU tile mapping
+# ---------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _round_down_pow2(x: int) -> int:
+    return 1 if x <= 1 else 2 ** int(math.log2(x))
+
+
+def choose_matmul_blocks(m: int, n: int, k: int, itemsize: int,
+                         options: CompileOptions) -> dict:
+    """Heuristic MXU block shapes — the paper's TeamPolicy team-size /
+    vector-length heuristics, re-derived for the TPU hierarchy.
+
+    Goals (paper §4.2 adapted): (i) last dim a multiple of the 128-wide lane
+    unit so loads coalesce into full (8,128) registers; (ii) both matmul
+    operands + accumulator fit the VMEM budget; (iii) MXU dims multiples of
+    128 so the systolic array is fully occupied.
+    """
+    mxu = options.mxu_dim
+    bm = min(_round_up(m, options.sublane_width), 512)
+    bn = min(_round_up(n, options.lane_width), 512)
+    bk = min(_round_up(k, options.lane_width), 2048)
+    # shrink until the working set fits VMEM:  bm*bk + bk*bn + bm*bn (f32 acc)
+    def footprint(bm, bn, bk):
+        return (bm * bk + bk * bn) * itemsize + bm * bn * 4
+    while footprint(bm, bn, bk) > options.vmem_limit_bytes // 2:
+        if bk > mxu:
+            bk //= 2
+        elif bm >= bn and bm > options.sublane_width:
+            bm //= 2
+        elif bn > options.lane_width:
+            bn //= 2
+        else:
+            break
+    return {"bm": bm, "bn": bn, "bk": bk}
+
+
+def choose_spmv_tiling(n_rows: int, nnz_mean: float,
+                       options: CompileOptions) -> dict:
+    """The paper's CSR heuristic (§4.2): vector length = ceil(avg nnz/row),
+    clamped to the hardware vector width.  On GPU that clamp is the warp
+    size (32); on TPU it is the 128-wide lane unit, and the "vector loop"
+    becomes the padded per-row width of an ELL-style row block."""
+    vec = int(math.ceil(max(nnz_mean, 1.0)))
+    vec = _round_up(vec, 8)
+    vec = min(vec, options.lane_width * 4)         # clamp (paper: warp 32)
+    rows_per_block = max(
+        options.sublane_width,
+        _round_down_pow2(options.vmem_limit_bytes // (8 * vec * 8)))
+    rows_per_block = min(rows_per_block, 1024, _round_up(n_rows, 8))
+    return {"row_block": rows_per_block, "row_width": vec}
+
+
+def choose_map_blocks(shape: tuple, itemsize: int, n_operands: int,
+                      options: CompileOptions) -> dict:
+    """Block an elementwise iteration space: innermost dim → lanes (×128),
+    next → sublanes (×8), leading dims → grid steps."""
+    if not shape:
+        return {"block": (), "grid": ()}
+    block = list(shape)
+    # lane dim
+    block[-1] = min(_round_up(shape[-1], options.lane_width), 1024)
+    if len(shape) >= 2:
+        block[-2] = min(_round_up(shape[-2], options.sublane_width), 512)
+    budget = options.vmem_limit_bytes // max(2 * n_operands, 2)
+    def fp():
+        return int(np.prod(block)) * itemsize
+    # collapse leading dims into grid until it fits
+    i = 0
+    while fp() > budget and i < len(block):
+        block[i] = 1
+        i += 1
+    while fp() > budget and len(shape) >= 2 and block[-2] > 8:
+        block[-2] //= 2
+    grid = tuple(-(-s // b) for s, b in zip(shape, block))
+    return {"block": tuple(block), "grid": grid}
+
+
+def tile_mapping(graph: Graph,
+                 options: Optional[CompileOptions] = None) -> int:
+    """Annotate ``kk.*`` ops with heuristic tiling attrs and convert
+    ``loops.parallel`` nests into ``tpu.grid_parallel`` ops.
+
+    This is the kokkos-loop-mapping pass: the nesting-depth→policy decision
+    table (1→range, 2→thread+vector, ≥3→team+thread+vector) becomes the
+    grid/block/lane level map, and the team-size/vector-length heuristics
+    become block-shape choices recorded in ``attrs["tiling"]``.
+    """
+    options = options or current_options()
+    mapped = 0
+    for op in list(graph.ops):
+        if op.opname == "kk.gemm":
+            a, b = op.operands
+            m, k = a.type.shape
+            n = b.type.shape[1]
+            itemsize = np.dtype(np.float32).itemsize if "32" in a.type.dtype \
+                else 2
+            op.attrs["tiling"] = choose_matmul_blocks(m, n, k, itemsize,
+                                                      options)
+            op.attrs["level_map"] = ("grid", "block", "lane")
+            mapped += 1
+        elif op.opname == "kk.batched_gemm":
+            a, b = op.operands
+            *batch, m, k = a.type.shape
+            n = b.type.shape[-1]
+            itemsize = 4 if "32" in a.type.dtype else 2
+            t = choose_matmul_blocks(m, n, k, itemsize, options)
+            # paper §6: for small matrices vectorize the *batch* dimension
+            small = m * n <= options.mxu_dim ** 2 // 4
+            t["batch_block"] = (
+                min(int(np.prod(batch)), options.sublane_width * 4)
+                if small else 1)
+            t["vectorize_batch"] = small
+            op.attrs["tiling"] = t
+            op.attrs["level_map"] = ("grid(batch)", "block", "lane")
+            mapped += 1
+        elif op.opname == "kk.spmv":
+            nnz_mean = op.attrs.get("nnz_mean")
+            n_rows = op.attrs["n_rows"]
+            if nnz_mean is None:
+                nnz = op.operands[2].type.shape[0]
+                nnz_mean = nnz / max(n_rows, 1)
+            op.attrs["tiling"] = choose_spmv_tiling(n_rows, nnz_mean, options)
+            op.attrs["level_map"] = ("grid(row-block)", "row", "lane(ell)")
+            mapped += 1
+        elif op.opname == "loops.parallel":
+            shape = op.attrs["iter_space"]
+            itemsize = 4 if "32" in op.results[0].type.dtype else 2
+            tiling = choose_map_blocks(shape, itemsize,
+                                       len(op.operands) + 1, options)
+            depth = len(shape)
+            level_map = (["grid"] * max(depth - 2, 0)
+                         + ["sublane", "lane"][max(2 - depth, 0):])
+            new = Op("tpu.grid_parallel", op.operands,
+                     [r.type for r in op.results],
+                     attrs={**op.attrs, "tiling": tiling,
+                            "level_map": tuple(level_map)})
+            graph.replace_op(op, [new], dict(zip(op.results, new.results)))
+            mapped += 1
+    return mapped
+
+
+# ---------------------------------------------------------------------------
+# 5. kokkos-dualview-management
+# ---------------------------------------------------------------------------
+
+_DEVICE_COMPUTE = {"kk", "tpu", "loops", "linalg", "tensor"}
+
+
+def dualview_management(graph: Graph,
+                        options: Optional[CompileOptions] = None) -> int:
+    """Assign memory spaces and insert lazy sync/modify ops (paper §4.3).
+
+    * graph inputs/outputs: DEVICE (they arrive as jax.Arrays);
+    * ``tensor.constant``: DUAL — host-resident weights mirrored to device
+      on first use (the paper's weights-embedded-in-source story);
+    * before the first device-compute use of a DUAL value: ``tpu.sync
+      {Device}`` (lazy: runtime checks the modified flag);
+    * after any op writing a DUAL value: ``tpu.modify {Device}``.
+
+    With ``options.lazy_dualview == False`` we emulate baseline-MLIR
+    behaviour instead (paper: sparse-gpu-codegen): *eager* copies around
+    every kernel — used as the benchmark baseline to show the lazy model's
+    win on multi-kernel programs (e.g. per-layer copies in ResNet).
+    """
+    options = options or current_options()
+    inserted = 0
+    for v in graph.inputs:
+        if v.type.memory_space is MemorySpace.ANY:
+            v.type = v.type.with_space(MemorySpace.DEVICE)
+    synced: set = set()
+    new_ops = []
+    for op in graph.ops:
+        if op.opname == "tensor.constant":
+            op.results[0].type = op.results[0].type.with_space(
+                MemorySpace.DUAL)
+            new_ops.append(op)
+            continue
+        for operand in op.operands:
+            if operand.type.memory_space is MemorySpace.DUAL:
+                need = options.lazy_dualview and operand.id not in synced
+                need = need or not options.lazy_dualview  # eager: every use
+                if need:
+                    new_ops.append(Op("tpu.sync", [operand], [],
+                                      attrs={"space": "device",
+                                             "lazy": options.lazy_dualview}))
+                    synced.add(operand.id)
+                    inserted += 1
+        new_ops.append(op)
+        for res in op.results:
+            if res.type.memory_space is MemorySpace.ANY:
+                res.type = res.type.with_space(MemorySpace.DEVICE)
+        if not options.lazy_dualview and op.results \
+                and not op.opname.startswith("tensor."):
+            # baseline-MLIR emulation (paper §4.3, sparse-gpu-codegen):
+            # every kernel's outputs are eagerly copied back to host
+            for res in op.results:
+                new_ops.append(Op("tpu.sync", [res], [],
+                                  attrs={"space": "host_roundtrip",
+                                         "lazy": False}))
+                inserted += 1
+    graph.ops = new_ops
+    return inserted
+
+
+# ---------------------------------------------------------------------------
+# pipeline driver (lapis-opt)
+# ---------------------------------------------------------------------------
+
+PIPELINE = (fuse_elementwise, linalg_to_library, linalg_to_loops,
+            tile_mapping, dualview_management)
+
+
+def run_pipeline(graph: Graph,
+                 options: Optional[CompileOptions] = None) -> Graph:
+    """``lapis-opt --sparse-compiler-kokkos`` analogue: run all passes."""
+    options = options or current_options()
+    stats = {}
+    for p in PIPELINE:
+        stats[p.__name__] = p(graph, options)
+    graph.dce()
+    graph.pipeline_stats = stats
+    return graph

@@ -1,0 +1,126 @@
+"""Per-op reference semantics: opname+attrs → pure-jnp callable.
+
+Used by the fusion pass (to compose elementwise chains), by the emitter (the
+"xla" lowering of any op that was not intercepted by a library call or a
+Pallas kernel), and by tests as the oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _spmv_ref(n_rows):
+    def ref(indptr, indices, values, x):
+        row_ids = jnp.cumsum(
+            jnp.zeros(values.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
+        contrib = values * x[indices]
+        return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
+    return ref
+
+
+def _conv2d_ref(attrs):
+    def ref(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, window_strides=tuple(attrs["stride"]),
+            padding=attrs["padding"],
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return ref
+
+
+def _batch_norm_ref(attrs):
+    eps = attrs.get("eps", 1e-5)
+
+    def ref(x, s, b, m, v):
+        inv = s * jax.lax.rsqrt(v + eps)
+        return x * inv[None, :, None, None] + (b - m * inv)[None, :, None, None]
+    return ref
+
+
+def _max_pool_ref(attrs):
+    def ref(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, 1) + tuple(attrs["window"]), (1, 1) + tuple(attrs["stride"]),
+            attrs["padding"])
+    return ref
+
+
+_SIMPLE = {
+    "linalg.add": jnp.add,
+    "linalg.sub": jnp.subtract,
+    "linalg.mul": jnp.multiply,
+    "linalg.div": jnp.divide,
+    "linalg.maximum": jnp.maximum,
+    "linalg.relu": jax.nn.relu,
+    "linalg.gelu": partial(jax.nn.gelu, approximate=True),
+    "linalg.silu": jax.nn.silu,
+    "linalg.sigmoid": jax.nn.sigmoid,
+    "linalg.tanh": jnp.tanh,
+    "linalg.exp": jnp.exp,
+    "linalg.neg": jnp.negative,
+    "linalg.sqrt": jnp.sqrt,
+    "linalg.rsqrt": jax.lax.rsqrt,
+    "linalg.matmul": jnp.matmul,
+    "linalg.batch_matmul": jnp.matmul,
+    "linalg.gemv": jnp.matmul,
+    "linalg.dot": jnp.dot,
+    "linalg.avg_pool_global": lambda x: jnp.mean(x, axis=(2, 3)),
+    # kk.* library semantics (used by the source emitter's freestanding path)
+    "kk.gemm": jnp.matmul,
+    "kk.gemv": jnp.matmul,
+    "kk.batched_gemm": jnp.matmul,
+}
+
+
+def op_ref(opname: str, attrs: dict) -> Callable:
+    """Return the pure-jnp callable implementing ``opname`` with ``attrs``."""
+    if opname in _SIMPLE:
+        return _SIMPLE[opname]
+    if opname == "linalg.power":
+        return lambda a: jnp.power(a, attrs["exponent"])
+    if opname == "linalg.reduce_sum":
+        return lambda a: jnp.sum(a, axis=attrs.get("axis"),
+                                 keepdims=attrs.get("keepdims", False))
+    if opname == "linalg.reduce_max":
+        return lambda a: jnp.max(a, axis=attrs.get("axis"),
+                                 keepdims=attrs.get("keepdims", False))
+    if opname == "linalg.mean":
+        return lambda a: jnp.mean(a, axis=attrs.get("axis"),
+                                  keepdims=attrs.get("keepdims", False))
+    if opname == "linalg.softmax":
+        return lambda a: jax.nn.softmax(a, axis=attrs.get("axis", -1))
+    if opname == "tensor.reshape":
+        return lambda a: jnp.reshape(a, attrs["shape"])
+    if opname == "tensor.transpose":
+        return lambda a: jnp.transpose(a, attrs.get("perm"))
+    if opname == "tensor.cast":
+        return lambda a: a.astype(attrs["dtype"])
+    if opname == "tensor.slice":
+        return lambda a: jax.lax.dynamic_slice(a, attrs["starts"],
+                                               attrs["sizes"])
+    if opname == "tensor.concat":
+        return lambda *a: jnp.concatenate(a, axis=attrs.get("axis", 0))
+    if opname == "tensor.broadcast":
+        return lambda a: jnp.broadcast_to(a, attrs["shape"])
+    if opname == "tensor.pad":
+        return lambda a: jnp.pad(a, attrs["pads"],
+                                 constant_values=attrs.get("value", 0.0))
+    if opname == "tensor.gather":
+        return lambda a, i: jnp.take(a, i, axis=attrs.get("axis", 0))
+    if opname in ("linalg.spmv_csr", "kk.spmv"):
+        return _spmv_ref(attrs["n_rows"])
+    if opname == "kk.conv2d":
+        return _conv2d_ref(attrs)
+    if opname == "linalg.batch_norm":
+        return _batch_norm_ref(attrs)
+    if opname == "linalg.max_pool2d":
+        return _max_pool_ref(attrs)
+    if opname == "kk.fused_elementwise":
+        return attrs["fn"]
+    if opname in ("linalg.map",):
+        return attrs["fn"]
+    raise KeyError(f"no reference semantics for {opname}")

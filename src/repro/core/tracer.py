@@ -1,0 +1,179 @@
+"""Python frontend — the repro analogue of torch-mlir / MPACT.
+
+``trace(fn, *specs)`` runs ``fn`` on symbolic ``TracedValue``s and records
+every ``repro.core.ops`` call into a tensor-dialect ``Graph`` (the
+linalg-on-tensors level of the paper).  Shapes/dtypes are inferred by
+``jax.eval_shape`` over each op's reference implementation, so the tracer
+never materializes data.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ir import Graph, MemorySpace, Op, TensorType, Value
+
+_tls = threading.local()
+
+
+def _jax_dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def type_of(x, memory_space: MemorySpace = MemorySpace.ANY,
+            encoding: Optional[str] = None) -> TensorType:
+    return TensorType(tuple(x.shape), _jax_dtype_name(x.dtype),
+                      memory_space, encoding)
+
+
+class TracedValue:
+    """A symbolic tensor flowing through a trace."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: Value):
+        self.value = value
+
+    @property
+    def shape(self) -> tuple:
+        return self.value.type.shape
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.value.type.dtype)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    def __repr__(self) -> str:
+        return f"TracedValue({self.value!r}: {self.value.type})"
+
+    # operator sugar → core.ops (lazy import to avoid the cycle)
+    def _ops(self):
+        from repro.core import ops
+        return ops
+
+    def __add__(self, other):  return self._ops().add(self, other)
+    def __radd__(self, other): return self._ops().add(other, self)
+    def __sub__(self, other):  return self._ops().sub(self, other)
+    def __rsub__(self, other): return self._ops().sub(other, self)
+    def __mul__(self, other):  return self._ops().mul(self, other)
+    def __rmul__(self, other): return self._ops().mul(other, self)
+    def __truediv__(self, other):  return self._ops().div(self, other)
+    def __rtruediv__(self, other): return self._ops().div(other, self)
+    def __matmul__(self, other):   return self._ops().matmul(self, other)
+    def __neg__(self):         return self._ops().neg(self)
+    def __pow__(self, p):      return self._ops().power(self, p)
+
+    def reshape(self, *shape):
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        return self._ops().reshape(self, shape)
+
+    def transpose(self, *perm):
+        if len(perm) == 1 and isinstance(perm[0], (tuple, list)):
+            perm = tuple(perm[0])
+        return self._ops().transpose(self, perm or None)
+
+    @property
+    def T(self):
+        return self.transpose()
+
+    def astype(self, dtype):
+        return self._ops().cast(self, dtype)
+
+    def sum(self, axis=None, keepdims=False):
+        return self._ops().reduce_sum(self, axis=axis, keepdims=keepdims)
+
+    def max(self, axis=None, keepdims=False):
+        return self._ops().reduce_max(self, axis=axis, keepdims=keepdims)
+
+    def mean(self, axis=None, keepdims=False):
+        return self._ops().mean(self, axis=axis, keepdims=keepdims)
+
+
+class TraceContext:
+    def __init__(self, name: str):
+        self.graph = Graph(name, inputs=[])
+        self.const_cache: dict = {}
+
+
+def current_trace() -> Optional[TraceContext]:
+    return getattr(_tls, "trace", None)
+
+
+def tracing() -> bool:
+    return current_trace() is not None
+
+
+def _set_trace(ctx: Optional[TraceContext]):
+    _tls.trace = ctx
+
+
+def lift_constant(x) -> TracedValue:
+    """Emit a tensor.constant for a concrete array/scalar met during tracing
+    (model weights captured by closure — the paper embeds these in the
+    generated C++)."""
+    ctx = current_trace()
+    assert ctx is not None
+    arr = np.asarray(x)
+    key = id(x) if isinstance(x, (np.ndarray, jax.Array)) else None
+    if key is not None and key in ctx.const_cache:
+        return ctx.const_cache[key]
+    t = TensorType(tuple(arr.shape), _jax_dtype_name(arr.dtype))
+    op = ctx.graph.add(Op("tensor.constant", [], [t], attrs={"value": arr}))
+    tv = TracedValue(op.results[0])
+    if key is not None:
+        ctx.const_cache[key] = tv
+    return tv
+
+
+def as_traced(x) -> TracedValue:
+    if isinstance(x, TracedValue):
+        return x
+    return lift_constant(x)
+
+
+def emit(opname: str, inputs: Sequence, ref: Callable,
+         attrs: Optional[dict] = None, n_results: int = 1) -> TracedValue:
+    """Record one op; infer result types via jax.eval_shape over ``ref``."""
+    ctx = current_trace()
+    assert ctx is not None, "emit() outside of a trace"
+    traced = [as_traced(x) for x in inputs]
+    specs = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in traced]
+    out = jax.eval_shape(ref, *specs)
+    flat, _ = jax.tree_util.tree_flatten(out)
+    result_types = [TensorType(tuple(o.shape), _jax_dtype_name(o.dtype))
+                    for o in flat]
+    op = ctx.graph.add(
+        Op(opname, [t.value for t in traced], result_types, attrs=attrs))
+    results = [TracedValue(r) for r in op.results]
+    return results[0] if n_results == 1 else tuple(results)
+
+
+def trace(fn: Callable, *arg_specs, name: Optional[str] = None,
+          encodings: Optional[Sequence] = None) -> Graph:
+    """Trace ``fn`` over ShapeDtypeStruct-like specs into a Graph."""
+    ctx = TraceContext(name or getattr(fn, "__name__", "main"))
+    args = []
+    for i, spec in enumerate(arg_specs):
+        enc = encodings[i] if encodings else None
+        t = TensorType(tuple(spec.shape), _jax_dtype_name(spec.dtype),
+                       MemorySpace.ANY, enc)
+        v = Value(t, name=f"arg{i}")
+        ctx.graph.inputs.append(v)
+        args.append(TracedValue(v))
+    prev = current_trace()
+    _set_trace(ctx)
+    try:
+        out = fn(*args)
+    finally:
+        _set_trace(prev)
+    outs = out if isinstance(out, (tuple, list)) else [out]
+    ctx.graph.outputs = [as_traced(o).value for o in outs]
+    return ctx.graph

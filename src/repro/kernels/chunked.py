@@ -1,0 +1,321 @@
+"""Memory-bounded chunked attention (online softmax in pure JAX).
+
+This is the **library-path** attention for long sequences: a double
+``lax.scan`` over (q-chunks × kv-chunks) carrying the flash-style running
+(max, sum, acc) state.  Peak live memory is O(q_chunk × kv_chunk) per
+(batch, head) instead of O(S²).  Fully-masked (q,kv)-chunk pairs are
+skipped with ``lax.cond`` — on hardware the causal triangle costs nothing,
+matching the Pallas kernel's block-skip behaviour.
+
+GQA is computed grouped — k/v are never materialized per-q-head.
+
+Two variants:
+
+* ``chunked_attention``      — plain; autodiff saves per-chunk softmax
+  residuals stacked over kv-chunks (O(S·qc) per layer) — the baseline
+  whose memory roofline term EXPERIMENTS.md §Perf iteration 1 measures.
+* ``flash_chunked_attention`` — ``custom_vjp``: forward saves only
+  (q, k, v, out, lse); backward **recomputes** probabilities per chunk
+  pair (the flash-attention backward).  Removes the stacked residual
+  traffic entirely at the cost of ~1.3× attention flops.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      logit_softcap: Optional[float] = None,
+                      q_chunk: int = 1024, kv_chunk: int = 1024
+                      ) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) → (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    nq = -(-Sq // qc)
+    nk = -(-Skv // kc)
+    psq, psk = nq * qc, nk * kc
+    if psq != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, psq - Sq), (0, 0)))
+    if psk != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, psk - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, psk - Skv), (0, 0)))
+    qg = q.reshape(B, Hkv, rep, nq, qc, D).transpose(3, 0, 1, 2, 4, 5)
+    kg = k.reshape(B, Hkv, nk, kc, D).transpose(2, 0, 1, 3, 4)
+    vg = v.reshape(B, Hkv, nk, kc, D).transpose(2, 0, 1, 3, 4)
+    # keep the scan (chunk-index) axes unsharded — a sequence-parallel
+    # residual would otherwise land its "model" sharding on the leading
+    # chunk axis and every dynamic-slice would trigger an SPMD full
+    # rematerialization (observed; see EXPERIMENTS.md §Perf)
+    from repro.dist.sharding import constrain
+    qg = constrain(qg, None, "batch", "kv_heads", None, None, None)
+    kg = constrain(kg, None, "batch", "kv_heads", None, None)
+    vg = constrain(vg, None, "batch", "kv_heads", None, None)
+
+    def q_step(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk            # q_blk: (B, Hkv, rep, qc, D)
+        qf = q_blk.astype(jnp.float32)
+
+        def kv_step(carry, ki_and_chunk):
+            m, l, acc = carry
+            ki, k_blk, v_blk = ki_and_chunk
+
+            def compute(args):
+                m, l, acc = args
+                kf = k_blk.astype(jnp.float32)   # (B, Hkv, kc, D)
+                vf = v_blk.astype(jnp.float32)
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+                if logit_softcap:
+                    s = logit_softcap * jnp.tanh(s / logit_softcap)
+                qpos = qi * qc + jnp.arange(qc)[:, None]
+                kpos = ki * kc + jnp.arange(kc)[None, :]
+                mask = kpos < Skv
+                if causal:
+                    mask &= kpos <= qpos
+                if window is not None:
+                    mask &= kpos > qpos - window
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+                acc_new = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd",
+                                                   p, vf)
+                return m_new, l_new, acc_new
+
+            # block-skip: §Perf iteration 2 tried removing this cond
+            # (its branch residuals stack under scan linearization), but
+            # the measurement REFUTED the idea — dead-pair compute and
+            # traffic cost more than the stacked residuals saved.  Kept.
+            m, l, acc = jax.lax.cond(_live(qi, ki, qc, kc, causal, window),
+                                     compute, lambda a: a, (m, l, acc))
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, Hkv, rep, qc, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, qc, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kg, vg))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        return None, out.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    # chunks: (nq, B, Hkv, rep, qc, D) → (B, Hq, Sq, D)
+    out = chunks.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, psq, D)
+    return out[:, :, :Sq, :]
+
+
+# ---------------------------------------------------------------------------
+# flash custom-vjp variant (EXPERIMENTS.md §Perf iteration 1)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, n, axis):
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, n - x.shape[axis])
+    return jnp.pad(x, pad) if n != x.shape[axis] else x
+
+
+def _chunk_mask(qi, ki, qc, kc, Skv, causal, window):
+    qpos = qi * qc + jnp.arange(qc)[:, None]
+    kpos = ki * kc + jnp.arange(kc)[None, :]
+    mask = kpos < Skv
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def _live(qi, ki, qc, kc, causal, window):
+    live = jnp.asarray(True)
+    if causal:
+        live &= ki * kc <= qi * qc + qc - 1
+    if window is not None:
+        live &= (ki + 1) * kc - 1 > qi * qc - window
+    return live
+
+
+def _flash_fwd(q, k, v, *, causal, window, scale, logit_softcap, qc, kc):
+    """→ (out (B,Hq,Sq,D), lse (B,Hkv,rep,Sq))."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    nq, nk = -(-Sq // qc), -(-Skv // kc)
+    from repro.dist.sharding import constrain
+    qg = _pad_to(q, nq * qc, 2).reshape(B, Hkv, rep, nq, qc, D) \
+        .transpose(3, 0, 1, 2, 4, 5)
+    kg = _pad_to(k, nk * kc, 2).reshape(B, Hkv, nk, kc, D) \
+        .transpose(2, 0, 1, 3, 4)
+    vg = _pad_to(v, nk * kc, 2).reshape(B, Hkv, nk, kc, D) \
+        .transpose(2, 0, 1, 3, 4)
+    qg = constrain(qg, None, "batch", "kv_heads", None, None, None)
+    kg = constrain(kg, None, "batch", "kv_heads", None, None)
+    vg = constrain(vg, None, "batch", "kv_heads", None, None)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+        qf = q_blk.astype(jnp.float32)
+
+        def kv_step(carry, ki_blk):
+            m, l, acc = carry
+            ki, k_blk, v_blk = ki_blk
+
+            def compute(args):
+                m, l, acc = args
+                s = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                               k_blk.astype(jnp.float32)) * scale
+                if logit_softcap:
+                    s = logit_softcap * jnp.tanh(s / logit_softcap)
+                mask = _chunk_mask(qi, ki, qc, kc, Skv, causal, window)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+                acc_new = acc * alpha + jnp.einsum(
+                    "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            return jax.lax.cond(_live(qi, ki, qc, kc, causal, window),
+                                compute, lambda a: a, (m, l, acc)), None
+
+        m0 = jnp.full((B, Hkv, rep, qc, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, qc, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kg, vg))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        lse = (m + jnp.log(jnp.where(l == 0.0, 1.0, l)))[..., 0]
+        return None, (out.astype(q.dtype), lse)
+
+    _, (chunks, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    out = chunks.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * qc, D)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, Hkv, rep, nq * qc)
+    return out[:, :, :Sq, :], lse[..., :Sq]
+
+
+def _flash_bwd(q, k, v, out, lse, g, *, causal, window, scale,
+               logit_softcap, qc, kc):
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    nq, nk = -(-Sq // qc), -(-Skv // kc)
+
+    def grp(x, n, c):
+        return _pad_to(x, n * c, 2).reshape(B, Hkv, rep, n, c, D) \
+            .transpose(3, 0, 1, 2, 4, 5).astype(jnp.float32)
+
+    from repro.dist.sharding import constrain
+    qg = grp(q, nq, qc)
+    og = grp(out, nq, qc)
+    gg = grp(g, nq, qc)
+    kg = _pad_to(k, nk * kc, 2).reshape(B, Hkv, nk, kc, D) \
+        .transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    vg = _pad_to(v, nk * kc, 2).reshape(B, Hkv, nk, kc, D) \
+        .transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    qg = constrain(qg, None, "batch", "kv_heads", None, None, None)
+    gg = constrain(gg, None, "batch", "kv_heads", None, None, None)
+    kg = constrain(kg, None, "batch", "kv_heads", None, None)
+    vg = constrain(vg, None, "batch", "kv_heads", None, None)
+    lse_g = _pad_to(lse[..., None], nq * qc, 3)[..., 0] \
+        .reshape(B, Hkv, rep, nq, qc).transpose(3, 0, 1, 2, 4)
+    # Di = rowsum(dout ⊙ out) per q position
+    Dg = jnp.sum(og * gg, axis=-1, keepdims=True)       # (nq,B,Hkv,rep,qc,1)
+
+    def kv_outer(dq_acc, kj_blk):
+        ki, k_blk, v_blk = kj_blk
+
+        def q_inner(carry, qi_blk):
+            dk_j, dv_j = carry
+            qi, q_blk, g_blk, lse_blk, d_blk, dq_i = qi_blk
+
+            def compute(args):
+                dk_j, dv_j, dq_i = args
+                s_raw = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk,
+                                   k_blk) * scale
+                if logit_softcap:
+                    t = jnp.tanh(s_raw / logit_softcap)
+                    s = logit_softcap * t
+                else:
+                    s = s_raw
+                mask = _chunk_mask(qi, ki, qc, kc, Skv, causal, window)
+                lse_safe = jnp.where(jnp.isfinite(lse_blk), lse_blk, 0.0)
+                p = jnp.where(mask[None, None, None],
+                              jnp.exp(s - lse_safe[..., None]), 0.0)
+                dv_j = dv_j + jnp.einsum("bhgqk,bhgqd->bhkd", p, g_blk)
+                dp = jnp.einsum("bhgqd,bhkd->bhgqk", g_blk, v_blk)
+                ds = p * (dp - d_blk) * scale
+                if logit_softcap:
+                    ds = ds * (1.0 - t * t)
+                dq_i = dq_i + jnp.einsum("bhgqk,bhkd->bhgqd", ds, k_blk)
+                dk_j = dk_j + jnp.einsum("bhgqk,bhgqd->bhkd", ds, q_blk)
+                return dk_j, dv_j, dq_i
+
+            dk_j, dv_j, dq_i = jax.lax.cond(
+                _live(qi, ki, qc, kc, causal, window), compute,
+                lambda a: a, (dk_j, dv_j, dq_i))
+            return (dk_j, dv_j), dq_i
+
+        zk = jnp.zeros((B, Hkv, kc, D), jnp.float32)
+        (dk_j, dv_j), dq_new = jax.lax.scan(
+            q_inner, (zk, zk),
+            (jnp.arange(nq), qg, gg, lse_g, Dg, dq_acc))
+        return dq_new, (dk_j, dv_j)
+
+    dq0 = jnp.zeros_like(qg)
+    dq_acc, (dk_all, dv_all) = jax.lax.scan(
+        kv_outer, dq0, (jnp.arange(nk), kg, vg))
+    dq = dq_acc.transpose(1, 2, 3, 0, 4, 5).reshape(
+        B, Hq, nq * qc, D)[:, :, :Sq, :].astype(q.dtype)
+    dk = dk_all.transpose(1, 2, 0, 3, 4).reshape(
+        B, Hkv, nk * kc, D)[:, :, :Skv, :].astype(k.dtype)
+    dv = dv_all.transpose(1, 2, 0, 3, 4).reshape(
+        B, Hkv, nk * kc, D)[:, :, :Skv, :].astype(v.dtype)
+    return dq, dk, dv
+
+
+_FLASH_CACHE = {}
+
+
+def flash_chunked_attention(q, k, v, *, causal: bool = True,
+                            window: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            logit_softcap: Optional[float] = None,
+                            q_chunk: int = 1024, kv_chunk: int = 1024):
+    """custom_vjp chunked attention: O(S) saved state, flash backward."""
+    D = q.shape[-1]
+    scale_v = scale if scale is not None else D ** -0.5
+    qc = min(q_chunk, q.shape[2])
+    kc = min(kv_chunk, k.shape[2])
+    key = (causal, window, scale_v, logit_softcap, qc, kc)
+    f = _FLASH_CACHE.get(key)
+    if f is None:
+        static = dict(causal=causal, window=window, scale=scale_v,
+                      logit_softcap=logit_softcap, qc=qc, kc=kc)
+
+        @jax.custom_vjp
+        def attn(q, k, v):
+            return _flash_fwd(q, k, v, **static)[0]
+
+        def fwd(q, k, v):
+            out, lse = _flash_fwd(q, k, v, **static)
+            return out, (q, k, v, out, lse)
+
+        def bwd(res, g):
+            return _flash_bwd(*res, g, **static)
+
+        attn.defvjp(fwd, bwd)
+        _FLASH_CACHE[key] = f = attn
+    return f(q, k, v)

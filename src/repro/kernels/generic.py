@@ -1,0 +1,58 @@
+"""Generic blocked map kernel — materializes ``tpu.grid_parallel`` ops.
+
+The tile-mapping pass turns a dense loop nest into grid/block/lane levels;
+this kernel executes the nest body (``fn``, the op's reference semantics)
+on VMEM blocks.  Equivalent of LAPIS emitting a Kokkos parallel_for whose
+body is the scalarized linalg op — here the body is vectorized over the
+block instead of scalarized (TPU has no scalar loop level worth using).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def block_map(fn: Callable, args: Sequence[jax.Array], out_shape: tuple,
+              out_dtype, *, block: tuple, interpret: bool = False
+              ) -> jax.Array:
+    """Apply elementwise/row-local ``fn`` over blocks of the iteration
+    space.  All args must share the iteration-space shape (guaranteed by
+    the linalg-to-loops pass preconditions)."""
+    if not out_shape:  # scalar result: no blocking
+        return fn(*args)
+    block = tuple(min(b, s) for b, s in zip(block, out_shape))
+    padded = tuple(_ceil(s, b) * b for s, b in zip(out_shape, block))
+    pad_cfg = tuple((0, p - s) for p, s in zip(padded, out_shape))
+    padded_args = [jnp.pad(a, pad_cfg) if padded != tuple(out_shape) else a
+                   for a in args]
+    grid = tuple(p // b for p, b in zip(padded, block))
+    nd = len(out_shape)
+
+    def kernel(*refs):
+        ins, out = refs[:-1], refs[-1]
+        out[...] = fn(*[r[...] for r in ins]).astype(out.dtype)
+
+    def idx_map(*gi):
+        return gi
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(block, idx_map) for _ in padded_args],
+        out_specs=pl.BlockSpec(block, idx_map),
+        out_shape=jax.ShapeDtypeStruct(padded, out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",) * len(grid)),
+        interpret=interpret,
+    )(*padded_args)
+    if padded != tuple(out_shape):
+        out = out[tuple(slice(0, s) for s in out_shape)]
+    return out

@@ -1,0 +1,196 @@
+"""Pure-jnp oracles for every Pallas kernel (the assignment's ref.py).
+
+These double as (a) the correctness oracle each kernel is swept against in
+tests/interpret mode, (b) the "xla" registry implementations where XLA's own
+lowering *is* the library path, and (c) the backward body for the kernels'
+``custom_vjp`` (forward runs the Pallas kernel, backward re-derives from the
+oracle — correct everywhere, with kernelized backward left as future work).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# dense linear algebra
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a, b)
+
+
+def batched_gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a, b)
+
+
+def gemv(a: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.matmul(a, x)
+
+
+# ---------------------------------------------------------------------------
+# sparse
+# ---------------------------------------------------------------------------
+
+def spmv_csr(indptr: jax.Array, indices: jax.Array, values: jax.Array,
+             x: jax.Array, *, n_rows: int) -> jax.Array:
+    """Segment-sum CSR SpMV (y = A @ x)."""
+    row_ids = jnp.cumsum(
+        jnp.zeros(values.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
+    return jax.ops.segment_sum(values * x[indices], row_ids,
+                               num_segments=n_rows)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal / sliding-window)
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              scale: Optional[float] = None,
+              logit_softcap: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); GQA via head-group repeat.
+
+    Rectangular (Sq ≠ Skv) supported for cross-attention; ``window``
+    limits attention to the previous ``window`` positions (recurrentgemma
+    local attention); ``logit_softcap`` applies grok-style tanh capping."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_softcap:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """One-token attention against a KV cache.
+
+    q: (B, Hq, D); caches: (B, Hkv, S, D); lengths: (B,) valid prefix."""
+    B, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, rep, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    if window is not None:
+        valid &= pos >= (lengths[:, None, None, None] - window)
+    logits = jnp.where(valid, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay WKV scan
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array,
+               state: Optional[jax.Array] = None) -> tuple:
+    """WKV6 recurrence.
+
+    r, k, w: (B, T, H, K); v: (B, T, H, V); u: (H, K);
+    state: (B, H, K, V) or None.
+    Returns (y: (B, T, H, V), final_state).
+
+      y_t  = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+      S_t  = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, K, V), jnp.float32)
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp          # (B,H,K), (B,H,K), (B,H,V), (B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,K,V)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt,
+                        s + uf[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma / Griffin)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_scan(x: jax.Array, r_gate: jax.Array, i_gate: jax.Array,
+               log_a_param: jax.Array,
+               state: Optional[jax.Array] = None) -> tuple:
+    """Real-Gated Linear Recurrent Unit.
+
+    x, r_gate, i_gate: (B, T, D) (gates are raw pre-sigmoid);
+    log_a_param: (D,) (Λ, pre-softplus); state: (B, D) or None.
+
+      a_t = exp(-c · softplus(Λ) · σ(r_t))
+      h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (σ(i_t) ⊙ x_t)
+    """
+    B, T, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, D), jnp.float32)
+    xf = x.astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(log_a_param.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, rt, it = inp
+        a_t = jnp.exp(log_a[None, :] * jax.nn.sigmoid(rt))
+        gated = jax.nn.sigmoid(it) * xt
+        # sqrt(1-a²) computed stably: a² = exp(2 log a σ(r))
+        scale = jnp.sqrt(jnp.maximum(
+            1.0 - jnp.exp(2.0 * log_a[None, :] * jax.nn.sigmoid(rt)),
+            1e-12))
+        h = a_t * h + scale * gated
+        return h, h
+
+    xs = (xf.transpose(1, 0, 2),
+          r_gate.astype(jnp.float32).transpose(1, 0, 2),
+          i_gate.astype(jnp.float32).transpose(1, 0, 2))
+    final, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2).astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# fused RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6
+            ) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) *
+            weight.astype(jnp.float32)).astype(x.dtype)

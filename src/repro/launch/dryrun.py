@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+  jit(step).lower(**input_specs).compile()
+then record memory_analysis(), cost_analysis(), and collective bytes parsed
+from the post-SPMD HLO into artifacts/dryrun/<cell>.json — the §Roofline
+table reads these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import all_arch_ids, get_config
+from repro.dist import sharding as shd
+from repro.launch import hlo as hlo_mod
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (SHAPES, batch_specs, cell_supported,
+                                 decode_specs)
+from repro.models.model import build_model
+from repro.optim import OptimizerConfig
+
+# v5e hardware constants (assignment §Roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               hp: Optional[steps_mod.TrainHParams] = None,
+               quantized_kv: bool = False):
+    """→ (lower_fn, kind).  lower_fn() returns the jax lowered object."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    # baseline: 8 gradient-accumulation microbatches — the standard way a
+    # 1M-token global batch fits per-device HBM (hillclimbs adjust this).
+    # ≥100B params: f32 AdamW state alone exceeds a 256-chip pod's HBM
+    # (480B → 5.8 TB > 4 TB), so the big archs run bf16 master + Adafactor.
+    if hp is None:
+        big = model.n_params() >= 100e9
+        hp = steps_mod.TrainHParams(
+            optimizer=OptimizerConfig(kind="adafactor" if big else "adamw"),
+            remat_policy="nothing",
+            master_dtype="bfloat16" if big else "float32",
+            microbatches=8)
+    kind = SHAPES[shape_name]["kind"]
+    with shd.use_mesh(mesh):
+        if kind == "train":
+            step = steps_mod.make_train_step(model, hp)
+            state_abs = steps_mod.abstract_train_state(model, hp)
+            state_sh = steps_mod.train_state_shardings(mesh, model, hp)
+            specs = batch_specs(cfg, shape_name)
+            batch_sh = steps_mod.batch_shardings(mesh, specs)
+            metrics_sh = {"loss": NamedSharding(mesh, P()),
+                          "grad_norm": NamedSharding(mesh, P()),
+                          "lr": NamedSharding(mesh, P())}
+            jitted = jax.jit(step,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, metrics_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, specs)
+        elif kind == "prefill":
+            S = SHAPES[shape_name]["seq"]
+            pstep = steps_mod.make_prefill_step(model, max_len=S,
+                                                quantized=quantized_kv)
+            params_abs = _bf16(model.abstract())
+            params_sh = shd.param_shardings(mesh, params_abs, model.axes())
+            specs = batch_specs(cfg, shape_name)
+            batch_sh = steps_mod.batch_shardings(mesh, specs)
+            cache_abs = jax.eval_shape(
+                lambda: pstep(_zeros(params_abs), _zeros(specs)))
+            out_sh = (NamedSharding(mesh, P()),
+                      steps_mod.cache_shardings(mesh, cache_abs[1]))
+            jitted = jax.jit(pstep, in_shardings=(params_sh, batch_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_abs, specs)
+        elif kind == "decode":
+            dstep = steps_mod.make_decode_step(model)
+            params_abs = _bf16(model.abstract())
+            params_sh = shd.param_shardings(mesh, params_abs, model.axes())
+            dspecs = decode_specs(cfg, shape_name,
+                                  quantized_kv=quantized_kv)
+            cache_sh = steps_mod.cache_shardings(mesh, dspecs["cache"])
+            B = dspecs["token"].shape[0]
+            tok_sh = shd.batch_sharding(mesh, (B,))
+            len_sh = NamedSharding(mesh, P())
+            logits_sh = shd.batch_sharding(mesh, (B, cfg.padded_vocab))
+            jitted = jax.jit(dstep,
+                             in_shardings=(params_sh, tok_sh, cache_sh,
+                                           len_sh),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_abs, dspecs["token"],
+                                   dspecs["cache"], dspecs["length"])
+        else:
+            raise ValueError(kind)
+    return lowered, cfg, model
+
+
+def _bf16(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def _zeros(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, a.dtype), tree)
+
+
+def model_flops(cfg, model, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch
+    (one token per row)."""
+    info = SHAPES[shape_name]
+    n = model.n_active_params()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        return 6.0 * n * tokens
+    if info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        return 2.0 * n * tokens          # forward only
+    return 2.0 * n * info["batch"]       # decode: one token per row
+
+
+def analyse(lowered, compiled, cfg, model, arch, shape_name, mesh_name,
+            n_chips, elapsed) -> dict:
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    # trip-count-aware HLO accounting (cost_analysis counts scan bodies
+    # once — useless for a 64-layer scanned model; see launch/hlo.py)
+    ha = hlo_mod.analyse_hlo(hlo_text)
+    coll = ha["collectives"]
+    flops = float(ha["flops"])
+    bytes_accessed = float(ha["bytes"])
+    # post-SPMD sizes are per-shard on the CPU backend.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    mf = model_flops(cfg, model, shape_name)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": n_chips,
+        "status": "ok",
+        "compile_seconds": round(elapsed, 1),
+        "n_params": model.n_params(),
+        "n_active_params": model.n_active_params(),
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "naive_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collective_bytes_per_device": coll["total"],
+        "collective_breakdown": {k: v for k, v in coll.items()
+                                 if k != "total"},
+        "collective_counts": ha["collective_counts"],
+        "top_bytes": [[f"{b:.3e}", op, comp, name]
+                      for b, op, comp, name in ha["top_bytes"][:12]],
+        "top_collectives": [[f"{b:.3e}", kind, comp, name, mlt]
+                            for b, kind, comp, name, mlt
+                            in ha["top_collectives"][:12]],
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "total_bytes": (ma.argument_size_in_bytes +
+                            ma.output_size_in_bytes +
+                            ma.temp_size_in_bytes -
+                            ma.alias_size_in_bytes),
+        },
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_chips,
+            "useful_flops_ratio":
+                (mf / n_chips) / flops if flops else 0.0,
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, hp=None, quantized_kv=False, tag="") -> dict:
+    cfg = get_config(arch)
+    ok, reason = cell_supported(cfg, shape_name)
+    mesh_name = "multi" if mesh_kind == "multi" else "single"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag
+                                                      else "")
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": reason}
+        _write(out_dir, cell_id, rec)
+        print(f"SKIP {cell_id}: {reason}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = len(mesh.devices.flatten())
+    t0 = time.time()
+    try:
+        lowered, cfg, model = build_cell(arch, shape_name, mesh, hp=hp,
+                                         quantized_kv=quantized_kv)
+        compiled = lowered.compile()
+        elapsed = time.time() - t0
+        rec = analyse(lowered, compiled, cfg, model, arch, shape_name,
+                      mesh_name, n_chips, elapsed)
+        if tag:
+            rec["tag"] = tag
+        mem = rec["memory"]["total_bytes"]
+        dom = rec["roofline"]["dominant"]
+        print(f"OK   {cell_id}: {elapsed:.0f}s  "
+              f"mem/dev={mem / 2**30:.2f}GiB  dominant={dom}  "
+              f"useful={rec['roofline']['useful_flops_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": repr(e),
+               "traceback": traceback.format_exc()}
+        print(f"FAIL {cell_id}: {e!r}")
+    _write(out_dir, cell_id, rec)
+    return rec
+
+
+def _write(out_dir, cell_id, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--quantized-kv", action="store_true")
+    p.add_argument("--tag", default="")
+    p.add_argument("--out", default="artifacts/dryrun")
+    args = p.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = all_arch_ids() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape_name, mesh_kind, args.out,
+                               quantized_kv=args.quantized_kv,
+                               tag=args.tag)
+                n_fail += rec.get("status") == "error"
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,19 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN §1).
+
+A function, not a module-level constant: importing this module never
+touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    set before jax init in the test process)."""
+    return jax.make_mesh(shape, axes)

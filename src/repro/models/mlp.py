@@ -1,0 +1,47 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (whisper-style)."""
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import constrain
+from repro.models.layers import activation
+from repro.models.spec import Spec
+
+
+def gated_mlp_spec(d: int, d_ff: int) -> dict:
+    return {
+        "w_gate": Spec((d, d_ff), ("embed", "ffn"), init="xavier"),
+        "w_up": Spec((d, d_ff), ("embed", "ffn"), init="xavier"),
+        "w_down": Spec((d_ff, d), ("ffn", "embed"), init="xavier"),
+    }
+
+
+def apply_gated_mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    dt = x.dtype
+    g = activation(act)(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    h = constrain(g * u, "batch", None, "ffn")
+    return h @ p["w_down"].astype(dt)
+
+
+def mlp_spec(d: int, d_ff: int, bias: bool = True) -> dict:
+    s = {
+        "w_in": Spec((d, d_ff), ("embed", "ffn"), init="xavier"),
+        "w_out": Spec((d_ff, d), ("ffn", "embed"), init="xavier"),
+    }
+    if bias:
+        s["b_in"] = Spec((d_ff,), ("ffn",), init="zeros")
+        s["b_out"] = Spec((d,), (None,), init="zeros")
+    return s
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str = "gelu") -> jax.Array:
+    dt = x.dtype
+    h = x @ p["w_in"].astype(dt)
+    if "b_in" in p:
+        h = h + p["b_in"].astype(dt)
+    h = constrain(activation(act)(h), "batch", None, "ffn")
+    y = h @ p["w_out"].astype(dt)
+    if "b_out" in p:
+        y = y + p["b_out"].astype(dt)
+    return y

@@ -1,0 +1,76 @@
+"""Model facade: one object per architecture wiring spec → init → forward /
+prefill / decode, used by tests, train.py, serve.py and dryrun.py."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serve as serve_mod
+from repro.models import transformer as tfm
+from repro.models.spec import (abstract_params, axes_tree, init_params,
+                               param_count)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    spec: dict
+
+    # -- params ---------------------------------------------------------------
+    def init(self, seed: int = 0):
+        return init_params(self.spec, jax.random.PRNGKey(seed))
+
+    def abstract(self):
+        return abstract_params(self.spec)
+
+    def axes(self):
+        return axes_tree(self.spec)
+
+    def n_params(self) -> int:
+        return param_count(self.spec)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top-k experts only)."""
+        cfg = self.cfg
+        if cfg.family != "moe":
+            return self.n_params()
+        total = self.n_params()
+        import numpy as np
+        E, k = cfg.n_experts, cfg.experts_per_tok
+        expert_p = 3 * cfg.d_model * cfg.d_ff * E * cfg.n_layers
+        return int(total - expert_p + expert_p * k / E)
+
+    # -- compute ---------------------------------------------------------------
+    def forward(self, params, batch: dict, *, remat_policy: str = "none",
+                scan_unroll: int = 1):
+        return tfm.forward_train(params, batch, self.cfg,
+                                 remat_policy=remat_policy,
+                                 scan_unroll=scan_unroll)
+
+    def loss(self, params, batch: dict, *, remat_policy: str = "none",
+             aux_weight: float = 0.01, scan_unroll: int = 1) -> jax.Array:
+        logits, aux = self.forward(params, batch,
+                                   remat_policy=remat_policy,
+                                   scan_unroll=scan_unroll)
+        return tfm.lm_loss(logits, batch["labels"]) + aux_weight * aux
+
+    def init_cache(self, batch: int, max_len: int, *,
+                   quantized: bool = False):
+        return serve_mod.init_cache(self.cfg, batch, max_len,
+                                    quantized=quantized)
+
+    def prefill(self, params, batch: dict, *, max_len: int,
+                quantized: bool = False):
+        return serve_mod.prefill(params, batch, self.cfg, max_len=max_len,
+                                 quantized=quantized)
+
+    def decode_step(self, params, token, cache, length):
+        return serve_mod.decode_step(params, token, cache, length, self.cfg)
+
+
+def build_model(cfg) -> Model:
+    cfg.validate()
+    return Model(cfg=cfg, spec=tfm.model_spec(cfg))

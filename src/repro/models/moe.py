@@ -1,0 +1,151 @@
+"""Top-k MoE layer (grok-1: 8e top-2; arctic: 128e top-2 + dense residual).
+
+Dispatch is **scatter-based** (sort-free GShard variant): tokens are placed
+into per-expert capacity buffers via cumsum slots, expert FFNs run as one
+einsum over the (E, C, M) buffer, and results gather back weighted by the
+router gates.  This avoids the (tokens, E, C) one-hot dispatch tensor of
+classic GShard, which at 1M tokens × 128 experts would dwarf HBM — the
+buffers here are O(E·C·M) = O(tokens · capacity_factor · k · M / 1).
+
+Expert sharding (cfg.moe_shard):
+  "ep" — experts over the model axis (arctic: 128/16 = 8 per device);
+  "tp" — d_ff within each expert over the model axis (grok-1: 8 experts
+         do not divide a 16-way axis; TP-inside-expert keeps every device
+         busy instead of padding experts 2×).
+
+The capacity estimate is the paper's CSR avg-work heuristic reappearing:
+expected tokens/expert = tokens·k/E, padded by capacity_factor and rounded
+to the lane width (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.layers import activation
+from repro.models.spec import Spec
+
+
+def _expert_axes(cfg) -> Tuple:
+    shard = getattr(cfg, "moe_shard", "auto")
+    if shard == "auto":
+        shard = "ep" if cfg.n_experts >= 64 else "tp"
+    if shard == "ep":
+        return (("experts", "embed", None),    # w_gate/up: (E, M, F)
+                ("experts", None, "embed"))    # w_down:    (E, F, M)
+    return ((None, "embed", "ffn"),
+            (None, "ffn", "embed"))
+
+
+def moe_spec(cfg) -> dict:
+    E, M, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    up_axes, down_axes = _expert_axes(cfg)
+    s = {
+        "router": Spec((M, E), ("embed", None), init="xavier"),
+        "w_gate": Spec((E, M, F), up_axes, init="xavier"),
+        "w_up": Spec((E, M, F), up_axes, init="xavier"),
+        "w_down": Spec((E, F, M), down_axes, init="xavier"),
+    }
+    if cfg.moe_dense_residual:
+        dff = cfg.dense_residual_ff or F
+        s["res_gate"] = Spec((M, dff), ("embed", "ffn"), init="xavier")
+        s["res_up"] = Spec((M, dff), ("embed", "ffn"), init="xavier")
+        s["res_down"] = Spec((dff, M), ("ffn", "embed"), init="xavier")
+    return s
+
+
+MOE_GROUPS = 32     # dispatch groups; aligned with the (pod×data) shards
+
+
+def _n_groups(T: int) -> int:
+    import math
+    return math.gcd(T, MOE_GROUPS)
+
+
+def capacity(group_tokens: int, cfg) -> int:
+    """Per-group expert capacity — the paper's avg-work heuristic: expected
+    tokens/expert padded by the capacity factor, rounded to the lane
+    width so the buffer tiles cleanly."""
+    per_expert = group_tokens * cfg.experts_per_tok / cfg.n_experts
+    c = int(per_expert * cfg.capacity_factor) + 1
+    return max(((c + 127) // 128) * 128, 128)
+
+
+def apply_moe(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, M) → (out, aux_loss).
+
+    **Grouped** scatter dispatch: tokens split into G groups aligned with
+    the data shards; each group owns an (E, C, M) capacity buffer, so the
+    buffer is sharded G-ways over (pod, data) × E-or-F-ways over "model" —
+    512-way total.  Without groups the expert einsum replicates across the
+    data axes (observed 32× flops blow-up in the grok-1 dry-run)."""
+    B, S, M = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_tok
+    dt = x.dtype
+    T = B * S
+    G = _n_groups(T)
+    Tg = T // G
+    C = capacity(Tg, cfg)
+    xt = x.reshape(G, Tg, M)
+    xt = constrain(xt, "batch", None, None)
+
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (G,Tg,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch-style, global means)
+    me = jnp.mean(probs, axis=(0, 1))                            # (E,)
+    ce = jnp.mean(jnp.sum(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # slot assignment per group: flatten (Tg, k) in priority order (all
+    # first choices before second), cumsum per expert → capacity slots
+    flat_expert = expert_idx.transpose(0, 2, 1).reshape(G, k * Tg)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)    # (G,kTg,E)
+    slots = jnp.cumsum(onehot, axis=1) - 1
+    slot = jnp.take_along_axis(slots, flat_expert[..., None],
+                               axis=2)[..., 0]                  # (G,kTg)
+    keep = slot < C
+    slot = jnp.where(keep, slot, 0)
+
+    # scatter tokens into per-group (E, C, M) buffers
+    token_ids = jnp.tile(jnp.arange(Tg), k)[None, :]             # (1,kTg)
+    gi = jnp.arange(G)[:, None]
+    contrib = jnp.where(keep[..., None],
+                        jnp.take_along_axis(
+                            xt, jnp.broadcast_to(
+                                token_ids[..., None], (G, k * Tg, M)),
+                            axis=1), 0)
+    buf = jnp.zeros((G, E, C, M), dt)
+    buf = buf.at[gi, flat_expert, slot].add(contrib)
+    buf = constrain(buf, "batch", "experts", None, None)
+
+    # expert FFNs as one grouped einsum (G over data, E or F over model)
+    g = activation(cfg.act)(jnp.einsum("gecm,emf->gecf", buf,
+                                       p["w_gate"].astype(dt)))
+    u = jnp.einsum("gecm,emf->gecf", buf, p["w_up"].astype(dt))
+    h = constrain(g * u, "batch", "experts", None, "ffn")
+    out_buf = jnp.einsum("gecf,efm->gecm", h, p["w_down"].astype(dt))
+    out_buf = constrain(out_buf, "batch", "experts", None, None)
+
+    # gather back, gate-weighted
+    gates_flat = gate_vals.transpose(0, 2, 1).reshape(G, k * Tg) \
+        .astype(dt)
+    picked = out_buf[gi, flat_expert, slot]                      # (G,kTg,M)
+    picked = jnp.where(keep[..., None], picked, 0) * \
+        gates_flat[..., None]
+    out = jnp.zeros((G, Tg, M), dt).at[
+        gi, jnp.broadcast_to(token_ids, (G, k * Tg))].add(picked)
+
+    if cfg.moe_dense_residual:
+        g = activation(cfg.act)(xt @ p["res_gate"].astype(dt))
+        u = xt @ p["res_up"].astype(dt)
+        out = out + (g * u) @ p["res_down"].astype(dt)
+
+    return out.reshape(B, S, M), aux.astype(jnp.float32)

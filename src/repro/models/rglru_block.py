@@ -1,0 +1,75 @@
+"""recurrentgemma (Griffin) temporal blocks: RG-LRU recurrent block and
+local (sliding-window) MQA attention block, in the published 1:2 pattern
+(two recurrent blocks per attention block).
+
+Recurrent block: x → [gelu(Wa x)] ⊙ [RG-LRU(conv1d(Wb x))] → Wo.
+Decode state: conv tail (width−1 inputs) + RG-LRU hidden — O(1) per step,
+which is what qualifies recurrentgemma-9b for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.spec import Spec
+
+
+def recurrent_block_spec(cfg) -> dict:
+    d, dr = cfg.d_model, cfg.rglru_dim
+    w = cfg.conv_width
+    return {
+        "w_gate_branch": Spec((d, dr), ("embed", "ffn"), init="xavier"),
+        "w_rec_branch": Spec((d, dr), ("embed", "ffn"), init="xavier"),
+        "conv_w": Spec((w, dr), (None, "ffn"), init="normal:0.1"),
+        "conv_b": Spec((dr,), ("ffn",), init="zeros"),
+        "rg_r": Spec((dr, dr), ("ffn", None), init="xavier"),
+        "rg_i": Spec((dr, dr), ("ffn", None), init="xavier"),
+        "log_a": Spec((dr,), (None,), init="uniform_decay"),
+        "w_out": Spec((dr, d), ("ffn", "embed"), init="xavier"),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   tail: Optional[jax.Array] = None) -> Tuple:
+    """Depthwise causal conv over time.  x: (B, T, D); w: (W, D).
+    ``tail``: (B, W-1, D) carried decode state."""
+    W = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(W))
+    new_tail = xp[:, -(W - 1):] if W > 1 else None
+    return out + b.astype(x.dtype), new_tail
+
+
+def apply_recurrent_block(p: dict, x: jax.Array, cfg, *,
+                          state: Optional[dict] = None,
+                          return_state: bool = False):
+    """state = {"conv": (B, W-1, Dr), "h": (B, Dr)} for decode."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dt), approximate=True)
+    rec = x @ p["w_rec_branch"].astype(dt)
+    rec = constrain(rec, "batch", None, "ffn")
+    conv_tail = state["conv"] if state is not None else None
+    rec, new_tail = _causal_conv1d(rec, p["conv_w"], p["conv_b"], conv_tail)
+    r_gate = rec @ p["rg_r"].astype(dt)
+    i_gate = rec @ p["rg_i"].astype(dt)
+    if state is not None and x.shape[1] == 1:
+        y, new_h = kref.rglru_scan(rec, r_gate, i_gate, p["log_a"],
+                                   state["h"])
+    else:
+        y = kops.rglru(rec, r_gate, i_gate, p["log_a"])
+        new_h = None
+        if return_state:
+            _, new_h = kref.rglru_scan(rec, r_gate, i_gate, p["log_a"])
+    out = (gate * y) @ p["w_out"].astype(dt)
+    if return_state or state is not None:
+        return out, {"conv": new_tail, "h": new_h}
+    return out

@@ -1,0 +1,62 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl M-RoPE.
+
+M-RoPE splits the rotary half-dims into (temporal, height, width) sections,
+each rotated by its own position stream.  For text-only input all three
+streams carry the same position (exactly qwen2-vl's text behaviour); the
+vision frontend stub supplies distinct streams.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x: (..., head_dim); pairs are (first half, second half)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, head_dim: int,
+               theta: float) -> jax.Array:
+    """x: (B, S, H, D) or (B, H, D); positions: (B, S) or (B,)."""
+    freqs = rope_freqs(head_dim, theta)                    # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == 4:                                        # (B,S,H,D)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    else:                                                  # (B,H,D) decode
+        cos, sin = cos[:, None, :], sin[:, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, *, head_dim: int,
+                theta: float, sections: Tuple[int, ...]) -> jax.Array:
+    """qwen2-vl M-RoPE.  positions3: (3, B, S) or (3, B); sections sum to
+    head_dim//2 (scaled if head_dim ≠ 128)."""
+    half = head_dim // 2
+    scale = half / sum(sections)
+    sec = [int(s * scale) for s in sections]
+    sec[-1] = half - sum(sec[:-1])
+    freqs = rope_freqs(head_dim, theta)                    # (half,)
+    # choose per-frequency position stream by section
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.asarray(sec),
+                         total_repeat_length=half)         # (half,)
+    pos = positions3.astype(jnp.float32)                   # (3,B,S) | (3,B)
+    pos_per_freq = jnp.take(pos, sec_ids, axis=0)          # (half,B,S)|(half,B)
+    if pos.ndim == 3:
+        ang = jnp.transpose(pos_per_freq, (1, 2, 0)) * freqs  # (B,S,half)
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    else:
+        ang = jnp.transpose(pos_per_freq, (1, 0)) * freqs     # (B,half)
+        cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

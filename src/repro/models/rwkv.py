@@ -1,0 +1,162 @@
+"""RWKV6 (Finch) block: data-dependent token-shift (ddlerp), data-dependent
+per-channel decay, WKV scan (Pallas kernel on TPU), and channel mixing.
+
+Decode keeps O(1) state per layer: (last hidden for the shift, WKV state
+(H, K, V)) — this is why rwkv6-3b runs the long_500k cell that quadratic
+attention cannot.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.layers import cdt
+from repro.models.spec import Spec
+
+_MIX_KEYS = ("w", "k", "v", "r", "g")
+
+
+def time_mix_spec(cfg) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    rank = cfg.rwkv_lora_rank
+    s = {
+        # ddlerp: μ_x plus per-stream μ_c and a shared low-rank modulation
+        "mu_x": Spec((d,), (None,), init="normal:0.5"),
+        "lora_a": Spec((d, 5 * rank), ("embed", None), init="xavier"),
+        "lora_b": Spec((5, rank, d), (None, None, "embed"), init="zeros"),
+        # decay: w0 + low-rank data-dependent part
+        "w0": Spec((d,), (None,), init="uniform_decay"),
+        "w_lora_a": Spec((d, rank), ("embed", None), init="xavier"),
+        "w_lora_b": Spec((rank, d), (None, "embed"), init="zeros"),
+        "u": Spec((H, hd), (None, None), init="normal:0.1"),
+        "wr": Spec((d, d), ("embed", "qkv"), init="xavier"),
+        "wk": Spec((d, d), ("embed", "qkv"), init="xavier"),
+        "wv": Spec((d, d), ("embed", "qkv"), init="xavier"),
+        "wg": Spec((d, d), ("embed", "qkv"), init="xavier"),
+        "wo": Spec((d, d), ("qkv", "embed"), init="xavier"),
+        "ln_x": Spec((d,), (None,), init="ones"),
+    }
+    for key in _MIX_KEYS:
+        s[f"mu_{key}"] = Spec((d,), (None,), init="normal:0.5")
+    return s
+
+
+def channel_mix_spec(cfg) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": Spec((d,), (None,), init="normal:0.5"),
+        "mu_r": Spec((d,), (None,), init="normal:0.5"),
+        "wk": Spec((d, dff), ("embed", "ffn"), init="xavier"),
+        "wr": Spec((d, d), ("embed", None), init="xavier"),
+        "wv": Spec((dff, d), ("ffn", "embed"), init="xavier"),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, shifted: jax.Array) -> dict:
+    """Data-dependent lerp (RWKV6 token shift) → the 5 mixed streams."""
+    dt = x.dtype
+    xx = shifted - x
+    base = x + xx * p["mu_x"].astype(dt)
+    rank = p["lora_a"].shape[1] // 5
+    lo = jnp.tanh(base @ p["lora_a"].astype(dt))          # (..., 5*rank)
+    lo = lo.reshape(lo.shape[:-1] + (5, rank))
+    mods = jnp.einsum("...fr,frd->...fd", lo, p["lora_b"].astype(dt))
+    out = {}
+    for i, key in enumerate(_MIX_KEYS):
+        mix = p[f"mu_{key}"].astype(dt) + mods[..., i, :]
+        out[key] = x + xx * mix
+    return out
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Per-channel data-dependent decay w ∈ (0,1)."""
+    dt = xw.dtype
+    dyn = jnp.tanh(xw @ p["w_lora_a"].astype(dt)) @ p["w_lora_b"].astype(dt)
+    return jnp.exp(-jnp.exp(
+        (p["w0"].astype(jnp.float32) - 5.0) + dyn.astype(jnp.float32)))
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, H: int) -> jax.Array:
+    """Per-head group norm of the WKV output (RWKV6's ln_x)."""
+    B, T, d = x.shape
+    xh = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(B, T, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_time_mix(p: dict, x: jax.Array, cfg, *,
+                   shift_state: Optional[jax.Array] = None,
+                   wkv_state: Optional[jax.Array] = None,
+                   return_state: bool = False):
+    """x: (B, T, D).  Training: states None.  Decode: T == 1 with states."""
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    dt = x.dtype
+    if shift_state is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :T]
+    else:
+        shifted = jnp.concatenate([shift_state[:, None, :], x[:, :-1]],
+                                  axis=1)
+    mixed = _ddlerp(p, x, shifted)
+    r = (mixed["r"] @ p["wr"].astype(dt)).reshape(B, T, H, hd)
+    k = (mixed["k"] @ p["wk"].astype(dt)).reshape(B, T, H, hd)
+    v = (mixed["v"] @ p["wv"].astype(dt)).reshape(B, T, H, hd)
+    g = jax.nn.silu(mixed["g"] @ p["wg"].astype(dt))
+    w = _decay(p, mixed["w"]).reshape(B, T, H, hd)
+    if T == 1 and wkv_state is not None:
+        # stateful single-step (decode): closed-form cell update
+        y, new_state = _wkv_cell(r[:, 0], k[:, 0], v[:, 0], w[:, 0],
+                                 p["u"].astype(jnp.float32), wkv_state)
+        y = y[:, None]
+    else:
+        y = kops.rwkv6(r, k, v, w.astype(dt), p["u"].astype(dt))
+        new_state = None
+        if return_state:
+            _, new_state = kref.rwkv6_scan(r, k, v, w.astype(dt),
+                                           p["u"].astype(dt))
+    y = _group_norm(y.reshape(B, T, d), p["ln_x"], H) * g
+    out = constrain(y, "batch", None, "qkv") @ p["wo"].astype(dt)
+    if return_state or wkv_state is not None:
+        return out, (x[:, -1, :], new_state)
+    return out
+
+
+def _wkv_cell(r, k, v, w, u, state):
+    """One recurrence step.  r/k/w: (B,H,K); v: (B,H,V); state (B,H,K,V)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state + u[None, :, :, None] * kv)
+    new_state = wf[..., :, None] * state + kv
+    B, H, V = y.shape
+    return y.reshape(B, H * V).astype(v.dtype), new_state
+
+
+def apply_channel_mix(p: dict, x: jax.Array, cfg, *,
+                      shift_state: Optional[jax.Array] = None,
+                      return_state: bool = False):
+    B, T, d = x.shape
+    dt = x.dtype
+    if shift_state is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :T]
+    else:
+        shifted = jnp.concatenate([shift_state[:, None, :], x[:, :-1]],
+                                  axis=1)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    k = constrain(k, "batch", None, "ffn")
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (k @ p["wv"].astype(dt))
+    if return_state or shift_state is not None:
+        return out, x[:, -1, :]
+    return out

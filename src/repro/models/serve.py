@@ -1,0 +1,391 @@
+"""Serving paths: prefill + single-token decode for every family.
+
+Cache layouts (stacked over layers for lax.scan):
+  dense/moe : {"k","v"[,"k_scale","v_scale"]}: (L, B, Hkv, S, hd)
+  rwkv      : {"shift1","shift2": (L,B,D), "wkv": (L,B,H,K,V)}
+  hybrid    : per pattern slot — R: {"conv": (G,B,W-1,Dr), "h": (G,B,Dr)},
+              A: ring-buffer {"k","v": (G,B,Hkv,W,hd)} over the local window
+  encdec    : decoder self-attn cache + per-layer static cross-attn k/v
+
+The decode entry points are what the decode_32k / long_500k dry-run cells
+lower (serve_step, not train_step).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru_block as rg_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import apply_embed, apply_norm, cdt
+from repro.models.transformer import (_cross_kv, _lm_head, _positions_for,
+                                      _sinusoid, _embed_input)
+
+
+# ---------------------------------------------------------------------------
+# cache init (zero state — what serve.py allocates per request slot)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, *,
+               quantized: bool = False) -> Dict[str, Any]:
+    fam = cfg.family
+    L = cfg.n_layers
+    if fam in ("dense", "moe"):
+        one = attn.init_kv_cache(cfg, batch, max_len, quantized=quantized)
+        return {"kv": jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)}
+    if fam == "rwkv":
+        H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+        D = cfg.d_model
+        return {
+            "shift1": jnp.zeros((L, batch, D), jnp.dtype(cfg.compute_dtype)),
+            "shift2": jnp.zeros((L, batch, D), jnp.dtype(cfg.compute_dtype)),
+            "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        }
+    if fam == "hybrid":
+        plen = len(cfg.pattern)
+        G, rem = divmod(cfg.n_layers, plen)
+        W = min(cfg.window, max_len)
+
+        def group_cache(n_groups, pattern):
+            c = {}
+            for i, kind in enumerate(pattern):
+                if kind == "R":
+                    c[f"b{i}_R"] = {
+                        "conv": jnp.zeros((n_groups, batch,
+                                           cfg.conv_width - 1,
+                                           cfg.rglru_dim), jnp.float32),
+                        "h": jnp.zeros((n_groups, batch, cfg.rglru_dim),
+                                       jnp.float32)}
+                else:
+                    c[f"b{i}_A"] = {
+                        "k": jnp.zeros((n_groups, batch, cfg.n_kv_heads, W,
+                                        cfg.head_dim),
+                                       jnp.dtype(cfg.compute_dtype)),
+                        "v": jnp.zeros((n_groups, batch, cfg.n_kv_heads, W,
+                                        cfg.head_dim),
+                                       jnp.dtype(cfg.compute_dtype))}
+            return c
+
+        out = {"groups": group_cache(G, cfg.pattern)}
+        if rem:
+            out["rem"] = group_cache(1, cfg.pattern[:rem])
+        return out
+    if fam == "encdec":
+        one = attn.init_kv_cache(cfg, batch, max_len, quantized=quantized)
+        return {
+            "kv": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(),
+                one),
+            "cross_k": jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                  cfg.head_dim), jnp.dtype(cfg.compute_dtype)),
+            "cross_v": jnp.zeros((L, batch, cfg.encoder_seq, cfg.n_kv_heads,
+                                  cfg.head_dim), jnp.dtype(cfg.compute_dtype)),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch: dict, cfg, *, max_len: int,
+            quantized: bool = False) -> Tuple[jax.Array, dict]:
+    """Run the full prompt; return (last-token logits, decode cache).
+    The cache is allocated at ``max_len`` and filled with the prompt's
+    entries (dense families) or final recurrent states."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_input(params, batch, cfg)
+    positions = _positions_for(cfg, B, S, batch)
+
+    if fam in ("dense", "moe"):
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            a, kv = attn.apply_attention_prefill(
+                lp["attn"], h, cfg, positions=positions,
+                quantized=quantized)
+            x = x + a
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            if fam == "moe":
+                mo, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+                x = x + mo
+            else:
+                x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)
+            return constrain(x, "batch", "seq", None), kv
+
+        x, kv_stack = jax.lax.scan(body, x, params["layers"])
+        pad = max_len - S
+        kv_stack = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                  (0, 0))), kv_stack)
+        cache = {"kv": kv_stack}
+    elif fam == "rwkv":
+        def body(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            tm, (sh1, wkv) = rwkv_mod.apply_time_mix(
+                lp["time_mix"], h, cfg, return_state=True)
+            x = x + tm
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            cm, sh2 = rwkv_mod.apply_channel_mix(
+                lp["channel_mix"], h, cfg, return_state=True)
+            x = x + cm
+            return constrain(x, "batch", "seq", None), \
+                {"shift1": sh1, "shift2": sh2, "wkv": wkv}
+
+        x, st = jax.lax.scan(body, x, params["layers"])
+        cache = st
+    elif fam == "hybrid":
+        W = min(cfg.window, max_len)
+
+        def entry(lp, x, kind, i):
+            h = apply_norm(lp["ln1"], x, cfg.norm)
+            if kind == "R":
+                r, state = rg_mod.apply_recurrent_block(
+                    lp["temporal"], h, cfg, return_state=True)
+                x = x + r
+                st = {"conv": state["conv"].astype(jnp.float32),
+                      "h": state["h"]}
+            else:
+                a, kv = attn.apply_attention_prefill(
+                    lp["temporal"], h, cfg, positions=positions,
+                    window=cfg.window)
+                x = x + a
+                st = {"k": _ring_from_prefill(kv["k"], S, W),
+                      "v": _ring_from_prefill(kv["v"], S, W)}
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)
+            return constrain(x, "batch", "seq", None), st
+
+        def group_body(pattern):
+            def body(x, gp):
+                sts = {}
+                for i, kind in enumerate(pattern):
+                    x, st = entry(gp[f"b{i}_{kind}"], x, kind, i)
+                    sts[f"b{i}_{kind}"] = st
+                return x, sts
+            return body
+
+        x, gstates = jax.lax.scan(group_body(cfg.pattern), x,
+                                  params["groups"])
+        cache = {"groups": gstates}
+        if "rem" in params:
+            rem_pattern = cfg.pattern[:cfg.n_layers % len(cfg.pattern)]
+            x, rstates = jax.lax.scan(group_body(rem_pattern), x,
+                                      params["rem"])
+            cache["rem"] = rstates
+    elif fam == "encdec":
+        return _prefill_encdec(params, batch, cfg, max_len=max_len,
+                               quantized=quantized)
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, cache
+
+
+def _ring_from_prefill(k: jax.Array, S: int, W: int) -> jax.Array:
+    """(B, Hkv, S, hd) → ring buffer (B, Hkv, W, hd) holding the last W
+    entries at slots p % W (absolute position p)."""
+    if S <= W:
+        return jnp.pad(k, ((0, 0), (0, 0), (0, W - S), (0, 0)))
+    last = k[:, :, S - W:, :]
+    return jnp.roll(last, shift=S % W, axis=2)
+
+
+def _prefill_encdec(params, batch, cfg, *, max_len: int, quantized: bool):
+    from repro.models.transformer import _scan_layers
+    frames = batch["audio_frames"].astype(jnp.dtype(cfg.compute_dtype))
+    enc = _sinusoid(frames.shape[1], cfg.d_model,
+                    frames.dtype)[None] + frames
+
+    def enc_layer(lp, x):
+        h = apply_norm(lp["ln1"], x, "layernorm")
+        x = x + attn.apply_attention(lp["attn"], h, cfg, positions=None,
+                                     causal=False)
+        h = apply_norm(lp["ln2"], x, "layernorm")
+        return x + mlp_mod.apply_mlp(lp["mlp"], h, "gelu"), \
+            jnp.zeros((), jnp.float32)
+
+    enc, _ = _scan_layers(enc_layer, params["enc_layers"], enc, policy=None)
+    enc = apply_norm(params["enc_final_ln"], enc, "layernorm")
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = apply_embed(params["embed"], tokens, cfg)
+    x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+
+    def dec_layer(x, lp):
+        h = apply_norm(lp["ln1"], x, "layernorm")
+        a, kv = attn.apply_attention_prefill(lp["self_attn"], h, cfg,
+                                             positions=None,
+                                             quantized=quantized)
+        x = x + a
+        h = apply_norm(lp["ln_cross"], x, "layernorm")
+        ck, cv = _cross_kv(lp["cross_attn"], enc, cfg)
+        x = x + attn.apply_attention(lp["cross_attn"], h, cfg, kv=(ck, cv))
+        h = apply_norm(lp["ln2"], x, "layernorm")
+        x = x + mlp_mod.apply_mlp(lp["mlp"], h, "gelu")
+        return x, (kv, ck, cv)
+
+    x, (kv_stack, ck, cv) = jax.lax.scan(dec_layer, x, params["dec_layers"])
+    pad = max_len - S
+    kv_stack = jax.tree_util.tree_map(
+        lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        kv_stack)
+    x = apply_norm(params["final_norm"], x, "layernorm")
+    logits = _lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, {"kv": kv_stack, "cross_k": ck, "cross_v": cv}
+
+
+# ---------------------------------------------------------------------------
+# decode (the serve_step)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, token: jax.Array, cache: dict, length: jax.Array,
+                cfg) -> Tuple[jax.Array, dict]:
+    """One decode step.  token: (B,) int32; length: scalar int32 — number
+    of tokens already in context.  Returns (logits (B, V), new cache)."""
+    fam = cfg.family
+    B = token.shape[0]
+    x = apply_embed(params["embed"], token[:, None], cfg)[:, 0]
+    x = constrain(x, "batch", "embed")
+
+    if fam in ("dense", "moe"):
+        def body(x, inp):
+            lp, kv = inp
+            h = apply_norm(lp["ln1"], x[:, None, :], cfg.norm)[:, 0]
+            a, kv = attn.apply_attention_decode(lp["attn"], h, cfg,
+                                                cache=kv, length=length)
+            x = x + a
+            h = apply_norm(lp["ln2"], x[:, None, :], cfg.norm)
+            if fam == "moe":
+                mo, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+                x = x + mo[:, 0]
+            else:
+                x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)[:, 0]
+            return x, kv
+
+        x, kv_stack = jax.lax.scan(body, x, (params["layers"],
+                                             cache["kv"]))
+        new_cache = {"kv": kv_stack}
+    elif fam == "rwkv":
+        def body(x, inp):
+            lp, st = inp
+            h = apply_norm(lp["ln1"], x[:, None, :], cfg.norm)
+            tm, (sh1, wkv) = rwkv_mod.apply_time_mix(
+                lp["time_mix"], h, cfg,
+                shift_state=st["shift1"], wkv_state=st["wkv"])
+            x = x + tm[:, 0]
+            h = apply_norm(lp["ln2"], x[:, None, :], cfg.norm)
+            cm, sh2 = rwkv_mod.apply_channel_mix(
+                lp["channel_mix"], h, cfg, shift_state=st["shift2"])
+            x = x + cm[:, 0]
+            return x, {"shift1": sh1, "shift2": sh2, "wkv": wkv}
+
+        x, st = jax.lax.scan(body, x, (params["layers"], cache))
+        new_cache = st
+    elif fam == "hybrid":
+        W = cache["groups"][next(k for k in cache["groups"]
+                                 if k.endswith("_A"))]["k"].shape[3] \
+            if any(k.endswith("_A") for k in cache["groups"]) else cfg.window
+
+        def entry(lp, x, kind, st):
+            h = apply_norm(lp["ln1"], x[:, None, :], cfg.norm)
+            if kind == "R":
+                r, nst = rg_mod.apply_recurrent_block(
+                    lp["temporal"], h, cfg,
+                    state={"conv": st["conv"], "h": st["h"]})
+                x = x + r[:, 0]
+                nst = {"conv": nst["conv"].astype(jnp.float32),
+                       "h": nst["h"]}
+            else:
+                a, nst = _ring_decode(lp["temporal"], h[:, 0], cfg, st,
+                                      length, W)
+                x = x + a
+            h = apply_norm(lp["ln2"], x[:, None, :], cfg.norm)
+            x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)[:, 0]
+            return x, nst
+
+        def group_body(pattern):
+            def body(x, inp):
+                gp, gst = inp
+                nst = {}
+                for i, kind in enumerate(pattern):
+                    key = f"b{i}_{kind}"
+                    x, nst[key] = entry(gp[key], x, kind, gst[key])
+                return x, nst
+            return body
+
+        x, gstates = jax.lax.scan(group_body(cfg.pattern), x,
+                                  (params["groups"], cache["groups"]))
+        new_cache = {"groups": gstates}
+        if "rem" in params:
+            rem_pattern = cfg.pattern[:cfg.n_layers % len(cfg.pattern)]
+            x, rstates = jax.lax.scan(group_body(rem_pattern), x,
+                                      (params["rem"], cache["rem"]))
+            new_cache["rem"] = rstates
+    elif fam == "encdec":
+        # sinusoidal positional embedding at the decode position
+        x = x + _sinusoid_at(length, cfg.d_model, x.dtype)[None, :]
+
+        def body(x, inp):
+            lp, kv, ck, cv = inp
+            h = apply_norm(lp["ln1"], x[:, None, :], "layernorm")[:, 0]
+            a, kv = attn.apply_attention_decode(lp["self_attn"], h, cfg,
+                                                cache=kv, length=length)
+            x = x + a
+            h = apply_norm(lp["ln_cross"], x[:, None, :], "layernorm")
+            x = x + attn.apply_attention(lp["cross_attn"], h, cfg,
+                                         kv=(ck, cv))[:, 0]
+            h = apply_norm(lp["ln2"], x[:, None, :], "layernorm")
+            x = x + mlp_mod.apply_mlp(lp["mlp"], h, "gelu")[:, 0]
+            return x, kv
+
+        x, kv_stack = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["kv"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = {"kv": kv_stack, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+    else:
+        raise ValueError(fam)
+
+    x = apply_norm(params["final_norm"], x[:, None, :], cfg.norm)
+    logits = _lm_head(params, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def _sinusoid_at(pos, channels: int, dtype):
+    """One row of the sinusoidal table at a traced position."""
+    dim = jnp.arange(channels // 2, dtype=jnp.float32)
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(channels // 2 - 1, 1)))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+
+
+def _ring_decode(p, x, cfg, st, length, W):
+    """Sliding-window decode against a ring-buffer cache.  Absolute RoPE is
+    applied at insert time, so ring order is irrelevant to the softmax."""
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    pos = jnp.full((B, 1), length, jnp.int32)
+    q, k, v = attn._project_qkv(p, x[:, None, :], cfg, pos)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]          # (B, H*, hd)
+    slot = jnp.mod(length, W)
+    nk = jax.lax.dynamic_update_slice_in_dim(
+        st["k"], k[:, :, None, :].astype(st["k"].dtype), slot, axis=2)
+    nv = jax.lax.dynamic_update_slice_in_dim(
+        st["v"], v[:, :, None, :].astype(st["v"].dtype), slot, axis=2)
+    n_valid = jnp.minimum(length + 1, W)
+    lengths = jnp.full((B,), n_valid, jnp.int32)
+    out = kops.decode_attention(q, nk, nv, lengths)
+    out = out.reshape(B, cfg.q_dim)
+    return out @ p["wo"].astype(x.dtype), {"k": nk, "v": nv}

@@ -1,0 +1,106 @@
+"""Declarative parameter specs.
+
+Each model layer declares its parameters ONCE as a tree of ``Spec``s
+(shape + logical sharding axes + initializer).  From that single source we
+derive: materialized params (``init_params``), sharding axes trees
+(``axes_tree``), abstract shapes for the dry-run (``abstract_params`` —
+ShapeDtypeStruct only, zero allocation), and parameter counts.
+
+Logical axis names (mapped to mesh axes by dist/sharding.py):
+  embed   — d_model dim (FSDP-sharded over the data axes)
+  ffn     — feed-forward hidden dim (TP over "model")
+  qkv     — fused heads×head_dim dim (TP over "model")
+  kv      — kv heads×head_dim (TP over "model" when divisible)
+  vocab   — vocabulary dim (TP over "model")
+  experts — MoE expert dim (EP over "model")
+  layers  — stacked-layer scan dim (never sharded)
+  None    — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal[:std] | xavier | zeros | ones | const:v
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def stack(spec_tree, n: int):
+    """Add a leading stacked-layers dim to every Spec in the tree."""
+    return jax.tree_util.tree_map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                       s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def _init_leaf(spec: Spec, key) -> jax.Array:
+    kind, _, arg = spec.init.partition(":")
+    if kind == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if kind == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if kind == "const":
+        return jnp.full(spec.shape, float(arg), spec.dtype)
+    if kind == "normal":
+        std = float(arg) if arg else 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) *
+                std).astype(spec.dtype)
+    if kind == "xavier":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = (1.0 / fan_in) ** 0.5
+        return (jax.random.normal(key, spec.shape, jnp.float32) *
+                std).astype(spec.dtype)
+    if kind == "uniform_decay":
+        # rwkv/rglru decay parameter spread across channels
+        n = spec.shape[-1]
+        base = jnp.linspace(0.0, 1.0, n, dtype=jnp.float32)
+        return jnp.broadcast_to(base, spec.shape).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(spec_tree, key) -> Any:
+    """Materialize a spec tree; per-leaf keys are derived from the leaf's
+    tree path so the result is stable under spec-tree extension."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec)
+    out = []
+    import zlib
+    for path, spec in leaves:
+        path_str = "/".join(str(p) for p in path)
+        # crc32: stable across processes (str hash() is salted)
+        leaf_key = jax.random.fold_in(key, zlib.crc32(path_str.encode()))
+        out.append(_init_leaf(spec, leaf_key))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree) -> Any:
+    """ShapeDtypeStruct tree — what the dry-run feeds to .lower()."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def axes_tree(spec_tree) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree,
+                                  is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec))

@@ -1,0 +1,376 @@
+"""Model assembly for all assigned families.
+
+Families: dense GQA decoders (qwen2/starcoder2/qwen1.5/qwen3/qwen2-vl),
+MoE decoders (grok-1, arctic), RWKV6, hybrid Griffin (recurrentgemma),
+and encoder-decoder (whisper).
+
+Layers are **stacked** and iterated with ``jax.lax.scan`` (compact HLO —
+compile time stays flat in depth, and the FSDP all-gather of layer l+1
+overlaps layer l under the latency-hiding scheduler).  Each layer body is
+wrapped in ``jax.checkpoint`` with a configurable remat policy.
+
+Three entry points per model, all pure functions of (params, batch):
+  forward_train — full-sequence causal LM (or enc-dec) → logits, aux
+  prefill       — forward + return per-layer decode caches
+  decode_step   — one token with stacked caches (the serve_step of the
+                  decode_32k / long_500k dry-run cells)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru_block as rg_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (apply_embed, apply_norm, apply_unembed,
+                                 cdt, layernorm_spec, norm_spec)
+from repro.models.spec import Spec, stack
+
+# ---------------------------------------------------------------------------
+# per-family layer specs
+# ---------------------------------------------------------------------------
+
+
+def dense_layer_spec(cfg) -> dict:
+    norm = norm_spec if cfg.norm == "rmsnorm" else layernorm_spec
+    return {"ln1": norm(cfg.d_model),
+            "attn": attn.attention_spec(cfg),
+            "ln2": norm(cfg.d_model),
+            "mlp": mlp_mod.gated_mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def moe_layer_spec(cfg) -> dict:
+    norm = norm_spec if cfg.norm == "rmsnorm" else layernorm_spec
+    return {"ln1": norm(cfg.d_model),
+            "attn": attn.attention_spec(cfg),
+            "ln2": norm(cfg.d_model),
+            "moe": moe_mod.moe_spec(cfg)}
+
+
+def rwkv_layer_spec(cfg) -> dict:
+    return {"ln1": norm_spec(cfg.d_model),
+            "time_mix": rwkv_mod.time_mix_spec(cfg),
+            "ln2": norm_spec(cfg.d_model),
+            "channel_mix": rwkv_mod.channel_mix_spec(cfg)}
+
+
+def hybrid_entry_spec(cfg, kind: str) -> dict:
+    temporal = (rg_mod.recurrent_block_spec(cfg) if kind == "R"
+                else attn.attention_spec(cfg))
+    return {"ln1": norm_spec(cfg.d_model),
+            "temporal": temporal,
+            "ln2": norm_spec(cfg.d_model),
+            "mlp": mlp_mod.gated_mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def hybrid_group_spec(cfg, pattern) -> dict:
+    return {f"b{i}_{kind}": hybrid_entry_spec(cfg, kind)
+            for i, kind in enumerate(pattern)}
+
+
+def encoder_layer_spec(cfg) -> dict:
+    return {"ln1": layernorm_spec(cfg.d_model),
+            "attn": attn.attention_spec(cfg),
+            "ln2": layernorm_spec(cfg.d_model),
+            "mlp": mlp_mod.mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def decoder_layer_spec(cfg) -> dict:
+    return {"ln1": layernorm_spec(cfg.d_model),
+            "self_attn": attn.attention_spec(cfg),
+            "ln_cross": layernorm_spec(cfg.d_model),
+            "cross_attn": attn.attention_spec(cfg),
+            "ln2": layernorm_spec(cfg.d_model),
+            "mlp": mlp_mod.mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def model_spec(cfg) -> dict:
+    """Full parameter spec tree for one architecture."""
+    s: Dict[str, Any] = {
+        "embed": {"table": Spec((cfg.padded_vocab, cfg.d_model),
+                                ("vocab", "embed"), init="normal")},
+        "final_norm": (norm_spec if cfg.norm == "rmsnorm"
+                       else layernorm_spec)(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = Spec((cfg.d_model, cfg.padded_vocab),
+                         ("embed", "vocab"), init="normal")
+    fam = cfg.family
+    if fam == "dense":
+        s["layers"] = stack(dense_layer_spec(cfg), cfg.n_layers)
+    elif fam == "moe":
+        s["layers"] = stack(moe_layer_spec(cfg), cfg.n_layers)
+    elif fam == "rwkv":
+        s["layers"] = stack(rwkv_layer_spec(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        plen = len(cfg.pattern)
+        n_groups, rem = divmod(cfg.n_layers, plen)
+        s["groups"] = stack(hybrid_group_spec(cfg, cfg.pattern), n_groups)
+        if rem:
+            s["rem"] = stack(hybrid_group_spec(cfg, cfg.pattern[:rem]), 1)
+    elif fam == "encdec":
+        s["enc_layers"] = stack(encoder_layer_spec(cfg),
+                                cfg.n_encoder_layers)
+        s["enc_final_ln"] = layernorm_spec(cfg.d_model)
+        s["dec_layers"] = stack(decoder_layer_spec(cfg), cfg.n_layers)
+    else:
+        raise ValueError(fam)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (single layer; used under scan)
+# ---------------------------------------------------------------------------
+
+def _dense_layer(lp, x, cfg, positions, window=None):
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    x = x + attn.apply_attention(lp["attn"], h, cfg, positions=positions,
+                                 causal=True, window=window)
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)
+    return constrain(x, "batch", "seq", None), jnp.zeros((), jnp.float32)
+
+
+def _moe_layer(lp, x, cfg, positions):
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    x = x + attn.apply_attention(lp["attn"], h, cfg, positions=positions,
+                                 causal=True)
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    moe_out, aux = moe_mod.apply_moe(lp["moe"], h, cfg)
+    return constrain(x + moe_out, "batch", "seq", None), aux
+
+
+def _rwkv_layer(lp, x, cfg):
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    x = x + rwkv_mod.apply_time_mix(lp["time_mix"], h, cfg)
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    x = x + rwkv_mod.apply_channel_mix(lp["channel_mix"], h, cfg)
+    return constrain(x, "batch", "seq", None), jnp.zeros((), jnp.float32)
+
+
+def _hybrid_group(gp, x, cfg, positions, pattern):
+    for i, kind in enumerate(pattern):
+        lp = gp[f"b{i}_{kind}"]
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        if kind == "R":
+            x = x + rg_mod.apply_recurrent_block(lp["temporal"], h, cfg)
+        else:
+            x = x + attn.apply_attention(lp["temporal"], h, cfg,
+                                         positions=positions, causal=True,
+                                         window=cfg.window)
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)
+    return constrain(x, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# scan-over-layers driver
+# ---------------------------------------------------------------------------
+
+def _scan_layers(layer_fn, stacked_params, x, *, policy: Optional[str],
+                 unroll: int = 1, layer_axes=None):
+    """scan x through stacked layers; layer_fn(lp, x) -> (x, aux).
+
+    ``layer_axes`` (the per-layer logical-axes tree) re-asserts the param
+    sharding on each scanned slice, so the backward pass reduce-scatters
+    per-layer grads onto their shards instead of all-reducing replicated
+    copies."""
+    fn = layer_fn
+    if policy and policy != "none":
+        fn = jax.checkpoint(layer_fn,
+                            policy=_remat_policy(policy),
+                            prevent_cse=True)
+
+    def body(carry, lp):
+        x, aux = carry
+        if layer_axes is not None:
+            from repro.dist.sharding import constrain_params
+            lp = constrain_params(lp, layer_axes)
+        x, a = fn(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stacked_params, unroll=unroll)
+    return x, aux
+
+
+def _remat_policy(name: str):
+    cp = jax.checkpoint_policies
+    return {
+        "nothing": cp.nothing_saveable,
+        "dots": cp.dots_saveable,
+        "dots_no_batch": cp.dots_with_no_batch_dims_saveable,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg, B: int, S: int, batch: dict):
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, axis=0)
+    if not cfg.mrope:
+        return pos
+    # M-RoPE: text positions by default; the vision stub supplies real
+    # (t, h, w) streams for the patch prefix when present.
+    pos3 = jnp.broadcast_to(pos[None], (3, B, S))
+    if "vision_positions" in batch:
+        vp = batch["vision_positions"]           # (3, B, Np)
+        Np = vp.shape[-1]
+        pos3 = jnp.concatenate([vp, pos3[:, :, Np:]], axis=2)
+    return pos3
+
+
+def _embed_input(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = apply_embed(params["embed"], tokens, cfg)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)   # (B, Np, D)
+        Np = ve.shape[1]
+        x = jnp.concatenate([ve, x[:, Np:]], axis=1)
+    return constrain(x, "batch", "seq", None)
+
+
+def forward_train(params, batch: dict, cfg, *,
+                  remat_policy: str = "nothing",
+                  scan_unroll: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """→ (logits (B, S, padded_vocab), aux_loss)."""
+    if cfg.family == "encdec":
+        return _forward_encdec(params, batch, cfg,
+                               remat_policy=remat_policy)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed_input(params, batch, cfg)
+    positions = _positions_for(cfg, B, S, batch)
+    fam = cfg.family
+    from repro.models.spec import axes_tree as _axes
+    if fam == "dense":
+        layer = lambda lp, x: _dense_layer(lp, x, cfg, positions)
+        x, aux = _scan_layers(layer, params["layers"], x,
+                              policy=remat_policy, unroll=scan_unroll,
+                              layer_axes=_axes(dense_layer_spec(cfg)))
+    elif fam == "moe":
+        layer = lambda lp, x: _moe_layer(lp, x, cfg, positions)
+        x, aux = _scan_layers(layer, params["layers"], x,
+                              policy=remat_policy, unroll=scan_unroll,
+                              layer_axes=_axes(moe_layer_spec(cfg)))
+    elif fam == "rwkv":
+        layer = lambda lp, x: _rwkv_layer(lp, x, cfg)
+        x, aux = _scan_layers(layer, params["layers"], x,
+                              policy=remat_policy, unroll=scan_unroll,
+                              layer_axes=_axes(rwkv_layer_spec(cfg)))
+    elif fam == "hybrid":
+        group = lambda gp, x: (_hybrid_group(gp, x, cfg, positions,
+                                             cfg.pattern),
+                               jnp.zeros((), jnp.float32))
+        x, aux = _scan_layers(
+            group, params["groups"], x,
+            policy=remat_policy, unroll=scan_unroll,
+            layer_axes=_axes(hybrid_group_spec(cfg, cfg.pattern)))
+        if "rem" in params:
+            rem_pattern = cfg.pattern[:cfg.n_layers % len(cfg.pattern)]
+            group_r = lambda gp, x: (_hybrid_group(gp, x, cfg, positions,
+                                                   rem_pattern),
+                                     jnp.zeros((), jnp.float32))
+            x, aux2 = _scan_layers(
+                group_r, params["rem"], x, policy=remat_policy,
+                layer_axes=_axes(hybrid_group_spec(cfg, rem_pattern)))
+            aux = aux + aux2
+    else:
+        raise ValueError(fam)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _lm_head(params, x, cfg)
+    return logits, aux
+
+
+def _lm_head(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = apply_unembed(params["embed"], x)
+    else:
+        logits = x @ params["head"].astype(x.dtype)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _forward_encdec(params, batch, cfg, *, remat_policy="nothing"):
+    frames = batch["audio_frames"].astype(jnp.dtype(cfg.compute_dtype))
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc = _sinusoid(frames.shape[1], cfg.d_model,
+                    frames.dtype)[None] + frames
+
+    def enc_layer(lp, x):
+        h = apply_norm(lp["ln1"], x, "layernorm")
+        x = x + attn.apply_attention(lp["attn"], h, cfg, positions=None,
+                                     causal=False)
+        h = apply_norm(lp["ln2"], x, "layernorm")
+        return x + mlp_mod.apply_mlp(lp["mlp"], h, "gelu"), \
+            jnp.zeros((), jnp.float32)
+
+    enc, _ = _scan_layers(enc_layer, params["enc_layers"], enc,
+                          policy=remat_policy)
+    enc = apply_norm(params["enc_final_ln"], enc, "layernorm")
+
+    x = apply_embed(params["embed"], tokens, cfg)
+    x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+
+    def dec_layer(lp, x):
+        h = apply_norm(lp["ln1"], x, "layernorm")
+        x = x + attn.apply_attention(lp["self_attn"], h, cfg,
+                                     positions=None, causal=True)
+        h = apply_norm(lp["ln_cross"], x, "layernorm")
+        kv = _cross_kv(lp["cross_attn"], enc, cfg)
+        x = x + attn.apply_attention(lp["cross_attn"], h, cfg, kv=kv)
+        h = apply_norm(lp["ln2"], x, "layernorm")
+        return x + mlp_mod.apply_mlp(lp["mlp"], h, "gelu"), \
+            jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_layers(dec_layer, params["dec_layers"], x,
+                        policy=remat_policy)
+    x = apply_norm(params["final_norm"], x, "layernorm")
+    return _lm_head(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _cross_kv(p, enc, cfg):
+    B, Se, _ = enc.shape
+    dt = enc.dtype
+    k = (enc @ p["wk"].astype(dt)).reshape(B, Se, cfg.n_kv_heads,
+                                           cfg.head_dim)
+    v = (enc @ p["wv"].astype(dt)).reshape(B, Se, cfg.n_kv_heads,
+                                           cfg.head_dim)
+    return k, v
+
+
+def _sinusoid(length: int, channels: int, dtype) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(channels // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(channels // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array, *,
+            z_loss: float = 1e-4) -> jax.Array:
+    """Masked CE over the real vocab (padded ids never appear in labels);
+    ``labels < 0`` = ignored.  A small z-loss keeps the (padded) softmax
+    normalizer tame at scale."""
+    lf = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    z = jnp.square(lse) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return (jnp.sum(nll) + z_loss * jnp.sum(z)) / denom

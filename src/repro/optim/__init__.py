@@ -1,0 +1,2 @@
+from repro.optim.optimizer import (OptimizerConfig, init_opt_state,
+                                   lr_at, opt_update)  # noqa: F401

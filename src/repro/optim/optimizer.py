@@ -1,0 +1,195 @@
+"""Optimizers: AdamW (f32 master + moments) and Adafactor (factored second
+moment — the memory-lean option for the 314B/480B cells), with global-norm
+clipping and warmup+cosine schedule.
+
+Mixed precision is structured for *on-wire* savings (DESIGN.md §6): the f32
+master weights live here; train_step casts master → bf16 compute params, so
+the FSDP all-gather of params and the reduce-scatter of grads both move
+bf16 — the gradient-"compression" that actually changes the collective
+roofline term.  An optional int8+error-feedback grad transform is provided
+as a further knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # gradient transform: none | bf16 | int8_ef (error feedback)
+    grad_transform: str = "none"
+
+
+def lr_at(step: jax.Array, hp: OptimizerConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - hp.warmup_steps) /
+                    jnp.maximum(hp.total_steps - hp.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return hp.lr * warm * (hp.min_lr_ratio + (1 - hp.min_lr_ratio) * cos)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params, hp: OptimizerConfig) -> dict:
+    """params = f32 master tree."""
+    if hp.kind == "adamw":
+        state = {
+            "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        }
+    elif hp.kind == "adafactor":
+        def fac(p):
+            # factored moments are tiny → keep them f32 even when the
+            # master weights are bf16
+            if p.ndim < 2:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        state = {"fac": jax.tree_util.tree_map(fac, params)}
+    else:
+        raise ValueError(hp.kind)
+    if hp.grad_transform == "int8_ef":
+        state["ef"] = jax.tree_util.tree_map(jnp.zeros_like, params)
+    state["step"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# gradient transforms (compression)
+# ---------------------------------------------------------------------------
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)) / 127.0, 1e-12)
+    q = jnp.round(g / scale).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def transform_grads(grads, state: dict, hp: OptimizerConfig) -> Tuple:
+    if hp.grad_transform == "none":
+        return grads, state
+    if hp.grad_transform == "bf16":
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads), \
+            state
+    if hp.grad_transform == "int8_ef":
+        new_g, new_ef = {}, {}
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_ef = tdef.flatten_up_to(state["ef"])
+        out_g, out_ef = [], []
+        for g, e in zip(flat_g, flat_ef):
+            corrected = g.astype(jnp.float32) + e
+            q = _quantize_int8(corrected)
+            out_g.append(q)
+            out_ef.append(corrected - q)
+        state = dict(state)
+        state["ef"] = tdef.unflatten(out_ef)
+        return tdef.unflatten(out_g), state
+    raise ValueError(hp.grad_transform)
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def opt_update(params, grads, state: dict, hp: OptimizerConfig
+               ) -> Tuple[Any, dict, dict]:
+    """→ (new_params, new_state, metrics).  params/grads trees align;
+    grads may be bf16 (cast up here)."""
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32), grads)
+    grads, state = transform_grads(grads, state, hp)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if hp.clip_norm else 1.0
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    step = state["step"] + 1
+    lr = lr_at(step, hp)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+
+    if hp.kind == "adamw":
+        b1, b2 = hp.b1, hp.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            pf = p.astype(jnp.float32)
+            new_p = (pf - lr * (mh / (jnp.sqrt(vh) + hp.eps)
+                                + hp.weight_decay * pf)).astype(p.dtype)
+            return new_p, m, v
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = dict(state,
+                         m=tdef.unflatten([o[1] for o in out]),
+                         v=tdef.unflatten([o[2] for o in out]),
+                         step=step)
+        return new_params, new_state, metrics
+
+    if hp.kind == "adafactor":
+        eps = 1e-30
+        decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+        def upd(p, g, f):
+            g2 = jnp.square(g) + eps
+            if p.ndim < 2:
+                v = decay * f["v"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                nf = {"v": v}
+            else:
+                vr = decay * f["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * f["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                v_est = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                u = g * jax.lax.rsqrt(v_est + eps)
+                nf = {"vr": vr, "vc": vc}
+            # update clipping (Adafactor RMS rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            pf = p.astype(jnp.float32)
+            new_p = (pf - lr * (u + hp.weight_decay * pf)).astype(p.dtype)
+            return new_p, nf
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_f = tdef.flatten_up_to(state["fac"])
+        out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = dict(state,
+                         fac=tdef.unflatten([o[1] for o in out]),
+                         step=step)
+        return new_params, new_state, metrics
+
+    raise ValueError(hp.kind)

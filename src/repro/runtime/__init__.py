@@ -1,0 +1,2 @@
+from repro.runtime.fault import (PreemptionHandler, Retrier,
+                                 StragglerDetector)  # noqa: F401

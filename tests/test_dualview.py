@@ -1,0 +1,97 @@
+"""DualView semantics — property-based (hypothesis) against an eager
+oracle that keeps a single always-consistent array."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dualview import (DualView, TRANSFERS, reset_transfer_stats,
+                                 tree_sync_host)
+
+
+def test_basic_lazy_sync_counts():
+    reset_transfer_stats()
+    dv = DualView.from_host(np.arange(6, dtype=np.float32))
+    _ = dv.device()
+    h2d = TRANSFERS["h2d"]
+    _ = dv.device()                       # flag check only
+    assert TRANSFERS["h2d"] == h2d
+    dv.set_host(np.zeros(6, np.float32))
+    _ = dv.device()                       # now it must copy
+    assert TRANSFERS["h2d"] == h2d + 1
+
+
+def test_child_shares_flags_and_aliases_host():
+    root = DualView.from_host(np.zeros((4, 4), np.float32))
+    child = root.subview((slice(0, 2), slice(0, 2)))
+    child.set_host(np.ones((2, 2), np.float32))
+    assert root.modified_host and child.modified_host
+    np.testing.assert_array_equal(root.host()[0:2, 0:2], 1.0)
+    # sibling children see each other's writes immediately (paper §4.3)
+    sib = root.subview((slice(0, 4), slice(0, 1)))
+    np.testing.assert_array_equal(sib.host_view()[0:2, 0], 1.0)
+
+
+def test_child_sync_syncs_parent():
+    root = DualView.from_host(np.zeros((4,), np.float32))
+    child = root.subview(slice(1, 3))
+    root.set_host(np.arange(4, dtype=np.float32))
+    dev = child.device()                  # triggers parent h2d
+    np.testing.assert_array_equal(np.asarray(dev), [1.0, 2.0])
+    assert not root.modified_host
+
+
+def test_set_device_on_child_updates_root():
+    root = DualView.from_host(np.zeros((4,), np.float32))
+    child = root.subview(slice(2, 4))
+    child.set_device(jax.numpy.ones(2))
+    np.testing.assert_array_equal(np.asarray(root.device())[2:], 1.0)
+    root.sync_host()
+    np.testing.assert_array_equal(root.host_view()[2:], 1.0)
+
+
+_ops = st.lists(
+    st.sampled_from(["wh", "wd", "sh", "sd", "whc", "shc"]),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=_ops, data=st.integers(0, 1000))
+def test_property_sequence_matches_oracle(ops, data):
+    """Random op sequences on a DualView + child vs a plain-array oracle."""
+    rng = np.random.default_rng(data)
+    oracle = np.zeros((4, 4), np.float32)
+    dv = DualView.from_host(oracle.copy())
+    child = dv.subview((slice(1, 3), slice(0, 2)))
+    for i, op in enumerate(ops):
+        val = np.float32(rng.integers(0, 100))
+        if op == "wh":
+            dv.set_host(np.full((4, 4), val))
+            oracle[...] = val
+        elif op == "wd":
+            dv.set_device(jax.numpy.full((4, 4), val))
+            oracle[...] = val
+        elif op == "whc":
+            child.set_host(np.full((2, 2), val))
+            oracle[1:3, 0:2] = val
+        elif op == "shc":
+            np.testing.assert_array_equal(
+                np.asarray(child.device()), oracle[1:3, 0:2])
+        elif op == "sh":
+            np.testing.assert_array_equal(dv.host(), oracle)
+        elif op == "sd":
+            np.testing.assert_array_equal(np.asarray(dv.device()), oracle)
+    np.testing.assert_array_equal(dv.host(), oracle)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_unchanged=st.integers(1, 5))
+def test_property_unchanged_leaves_cost_zero_copies(n_unchanged):
+    """The checkpoint-staging property: leaves not touched since the last
+    sync do not transfer again."""
+    views = [DualView.from_device(jax.numpy.ones(8) * i)
+             for i in range(n_unchanged)]
+    assert tree_sync_host(views) == n_unchanged   # first save: all copy
+    assert tree_sync_host(views) == 0             # second save: none
+    views[0].set_device(jax.numpy.zeros(8))
+    assert tree_sync_host(views) == 1             # only the dirty one

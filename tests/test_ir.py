@@ -1,0 +1,56 @@
+"""IR construction, printing, rewiring, DCE."""
+import numpy as np
+import pytest
+
+from repro.core.ir import Graph, MemorySpace, Op, TensorType, Value
+
+
+def _g():
+    t = TensorType((4, 4), "float32")
+    a, b = Value(t, name="a"), Value(t, name="b")
+    g = Graph("f", inputs=[a, b])
+    add = g.add(Op("linalg.add", [a, b], [t]))
+    mul = g.add(Op("linalg.mul", [add.results[0], b], [t]))
+    g.outputs = [mul.results[0]]
+    return g, a, b, add, mul
+
+
+def test_types():
+    t = TensorType((2, 3), "float32", MemorySpace.DUAL)
+    assert "2x3xfloat32" in str(t)
+    assert "#dual" in str(t)
+    assert t.nbytes == 24
+    assert t.with_space(MemorySpace.VMEM).memory_space is MemorySpace.VMEM
+
+
+def test_walk_and_users():
+    g, a, b, add, mul = _g()
+    assert [op.opname for op in g.walk()] == ["linalg.add", "linalg.mul"]
+    users = g.users()
+    assert len(users[add.results[0].id]) == 1
+    assert len(users[b.id]) == 2   # add and mul
+
+
+def test_replace_op_rewires():
+    g, a, b, add, mul = _g()
+    t = add.results[0].type
+    sub = Op("linalg.sub", [a, b], [t])
+    g.replace_op(add, [sub], {add.results[0]: sub.results[0]})
+    assert mul.operands[0] is sub.results[0]
+    assert g.ops[0] is sub
+
+
+def test_dce_removes_dead_keeps_side_effects():
+    g, a, b, add, mul = _g()
+    t = add.results[0].type
+    dead = g.add(Op("linalg.neg", [a], [t]))
+    sync = g.add(Op("tpu.sync", [a], []))
+    removed = g.dce()
+    assert removed == 1
+    assert dead not in g.ops and sync in g.ops
+
+
+def test_print_roundtrip_contains_structure():
+    g, *_ = _g()
+    s = str(g)
+    assert "func @f" in s and "linalg.add" in s and "return" in s
