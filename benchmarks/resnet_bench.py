@@ -9,6 +9,8 @@ width 0.5 (ResNet18 topology preserved: 8 blocks, 4 stages, downsamples).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from benchmarks.common import row, time_fn
@@ -19,15 +21,21 @@ BATCH, RES, WIDTH = 8, 64, 0.5
 def main(print_rows=True):
     from repro.core import pipeline
     from repro.core.dualview import TRANSFERS, reset_transfer_stats
-    from repro.core.options import CompileOptions
+    from repro.core.options import current_options
     from repro.models.resnet import init_resnet18_weights, resnet18_forward
+
+    # derive from the ambient options so `benchmarks.run --targets ...`
+    # really benchmarks this section per backend
+    def opts(**overrides):
+        return dataclasses.replace(current_options(),
+                                   fuse_elementwise=False, **overrides)
 
     rng = np.random.default_rng(0)
     w = init_resnet18_weights(rng, width_mult=WIDTH)
     x = rng.standard_normal((BATCH, 3, RES, RES)).astype(np.float32)
 
     mod = pipeline.compile(lambda xx: resnet18_forward(w, xx), x,
-                           options=CompileOptions(fuse_elementwise=False))
+                           options=opts())
     probs = np.asarray(mod(x))
     assert probs.shape == (BATCH, 1000) and np.allclose(
         probs.sum(-1), 1.0, atol=1e-3)
@@ -39,7 +47,7 @@ def main(print_rows=True):
     reset_transfer_stats()
     mod_lazy = pipeline.compile(
         lambda xx: resnet18_forward(w, xx), x, jit=False,
-        options=CompileOptions(fuse_elementwise=False, lazy_dualview=True))
+        options=opts(lazy_dualview=True))
     mod_lazy(x)
     t_lazy = time_fn(mod_lazy, x, reps=3)
     lazy_transfers = TRANSFERS["h2d"] + TRANSFERS["d2h"]
@@ -47,8 +55,7 @@ def main(print_rows=True):
     reset_transfer_stats()
     mod_eager = pipeline.compile(
         lambda xx: resnet18_forward(w, xx), x, jit=False,
-        options=CompileOptions(fuse_elementwise=False,
-                               lazy_dualview=False))
+        options=opts(lazy_dualview=False))
     mod_eager(x)
     t_eager = time_fn(mod_eager, x, reps=3)
     eager_transfers = TRANSFERS["h2d"] + TRANSFERS["d2h"]

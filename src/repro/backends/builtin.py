@@ -1,0 +1,65 @@
+"""Built-in backends: ``xla`` (vendor library), ``pallas`` (hand-tiled
+kernels) and ``auto`` (the paper's default per-op heuristic).
+
+These were the two hardcoded target strings of the seed; they now register
+through the same plugin API any new architecture uses.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.backend import (Backend, LIBRARY_PREFERRED, LOWERED_PIPELINE,
+                                TENSOR_PIPELINE, get_backend,
+                                register_backend)
+
+
+def _load_kernels() -> None:
+    # registers both the xla ("vendor library") and pallas implementations
+    # of every kk.* op; idempotent via sys.modules
+    import repro.kernels.ops  # noqa: F401
+
+
+def _auto_select(backend: Backend, opname: str, options) -> str:
+    """The seed's auto heuristic: prefer the library for known
+    hand-optimized ops; Pallas for the rest when a real TPU backs it (on
+    CPU hosts interpret-mode kernels are a validation tool, not a
+    performance path — auto stays on the library)."""
+    if options.prefer_library and opname in LIBRARY_PREFERRED:
+        return "xla"
+    if jax.default_backend() != "tpu" and options.interpret is not True:
+        return "xla"
+    pallas = get_backend("pallas")
+    pallas.ensure_loaded()
+    return "pallas" if pallas.kernel(opname) is not None else "xla"
+
+
+register_backend(Backend(
+    name="xla",
+    description="XLA library path (TPU's cuBLAS: MXU dot_general; "
+                "linalg-to-kokkoskernels analogue)",
+    capabilities=frozenset({"library", "source-emission"}),
+    pipeline=TENSOR_PIPELINE,
+    loader=_load_kernels,
+))
+
+register_backend(Backend(
+    name="pallas",
+    description="hand-tiled Pallas kernels (the pure-Kokkos lowering path)",
+    capabilities=frozenset({"custom-kernels", "loop-nests"}),
+    pipeline=LOWERED_PIPELINE,
+    fallbacks=("xla",),
+    loader=_load_kernels,
+    passes_interpret=True,
+))
+
+register_backend(Backend(
+    name="auto",
+    description="per-op heuristic: library for hand-optimized ops, "
+                "kernels elsewhere when a TPU backs them",
+    capabilities=frozenset({"library"}),
+    pipeline=TENSOR_PIPELINE,
+    fallbacks=("xla",),
+    loader=_load_kernels,
+    selector=_auto_select,
+    kernel_predicate=lambda options: jax.default_backend() == "tpu",
+))

@@ -1,0 +1,126 @@
+"""``loops`` reference backend — a pure-jnp loop-nest interpreter.
+
+This is the repro analogue of the paper's generated-Kokkos-loops path: no
+library matmul interception, no Pallas — every op executes as an explicit
+loop nest over tiles of its iteration space, with only elementwise
+arithmetic and reductions inside each tile (what
+dense-linalg-to-parallel-loops + kokkos-loop-mapping would emit as
+``Kokkos::parallel_for`` nests).  It exists to (a) prove the plugin API —
+it registers entirely through ``repro.core.backend`` with zero edits to
+core files — and (b) serve as the slow-but-obviously-correct baseline
+benchmarkable side by side with the library and kernel backends (the
+paper's generated-loops vs KokkosBlas comparison, Table 6.2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.backend import (Backend, LOWERED_PIPELINE, register_backend,
+                                register_kernel)
+
+# Cap on a single tile's broadcast working set (bm × k × n elements).  The
+# loop nest materializes the elementwise product before reducing, so the
+# row-block size is shrunk until a tile fits.
+_TILE_BUDGET_ELEMS = 2 ** 24
+
+
+def _row_block(bm: int, k: int, n: int) -> int:
+    bm = max(int(bm), 1)
+    while bm > 1 and bm * k * n > _TILE_BUDGET_ELEMS:
+        bm //= 2
+    return bm
+
+
+def _gemm_tile(a_blk, b):
+    # thread × vector loops: broadcast-multiply then reduce over k — the
+    # textbook triple loop, vectorized per tile (no dot/library call)
+    return jnp.sum(a_blk[:, :, None] * b[None, :, :], axis=1)
+
+
+def gemm_loops(a, b, *, tiling=None):
+    t = tiling or {}
+    m, k = a.shape
+    n = b.shape[1]
+    bm = _row_block(t.get("bm", 8), k, n)
+    rows = [_gemm_tile(a[i0:i0 + bm], b)        # team loop over row blocks
+            for i0 in range(0, m, bm)]
+    out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+    return out.astype(a.dtype)
+
+
+def gemv_loops(a, x, *, tiling=None):
+    t = tiling or {}
+    m, k = a.shape
+    bm = _row_block(t.get("bm", 64), k, 1)
+    rows = [jnp.sum(a[i0:i0 + bm] * x[None, :], axis=1)
+            for i0 in range(0, m, bm)]
+    out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+    return out.astype(a.dtype)
+
+
+def batched_gemm_loops(a, b, *, tiling=None):
+    t = tiling or {}
+    *batch, m, k = a.shape
+    n = b.shape[-1]
+    a2 = a.reshape((-1, m, k))
+    b2 = b.reshape((-1,) + b.shape[-2:]) if b.ndim > 2 else b
+    bb = max(int(t.get("batch_block", 1) or 1), 1)
+    while bb > 1 and bb * m * k * n > _TILE_BUDGET_ELEMS:
+        bb //= 2
+    blocks = []
+    for i0 in range(0, a2.shape[0], bb):        # grid loop over the batch
+        a_blk = a2[i0:i0 + bb]
+        b_blk = b2[i0:i0 + bb] if b2.ndim == 3 else b2[None]
+        blocks.append(jnp.sum(a_blk[:, :, :, None] * b_blk[:, None, :, :],
+                              axis=2))
+    out = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=0)
+    return out.reshape(tuple(batch) + (m, n)).astype(a.dtype)
+
+
+def _grid_parallel_loops(op, options):
+    """Interpret a tile-mapped ``tpu.grid_parallel`` op as a Python grid
+    loop over row blocks with the op's jnp body applied per tile."""
+    fn = op.attrs["fn"]
+    kind = op.attrs["kind"]
+    shape = op.results[0].type.shape
+    block = (op.attrs.get("tiling") or {}).get("block", shape)
+    if kind == "reduce":
+        # tiling splits axis 0, so the reduced axis must not be axis 0 —
+        # currently guaranteed by linalg_to_loops (last-axis softmax only),
+        # but guard here so extending that pass can't silently slice a
+        # reduction apart
+        axis = op.attrs.get("axis", -1)
+        ndim = len(shape)
+        if ndim < 2 or axis % ndim == 0:
+            return lambda *args: fn(*args)   # single tile, no split
+
+    def run(*args):
+        if not shape:
+            return fn(*args)
+        b0 = min(block[0] if block else shape[0], shape[0]) or shape[0]
+        tiles = [fn(*(a[i0:i0 + b0] for a in args))
+                 for i0 in range(0, shape[0], b0)]
+        return tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, 0)
+
+    return run
+
+
+def _loops_executor(op, options):
+    if op.opname == "tpu.grid_parallel":
+        return _grid_parallel_loops(op, options)
+    return None
+
+
+register_backend(Backend(
+    name="loops",
+    description="pure-jnp loop-nest interpreter (the paper's "
+                "generated-Kokkos-loops path; reference/baseline)",
+    capabilities=frozenset({"loop-nests", "reference"}),
+    pipeline=LOWERED_PIPELINE,
+    fallbacks=("xla",),
+    op_executor=_loops_executor,
+))
+
+register_kernel("kk.gemm", "loops", gemm_loops)
+register_kernel("kk.gemv", "loops", gemv_loops)
+register_kernel("kk.batched_gemm", "loops", batched_gemm_loops)

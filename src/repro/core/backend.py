@@ -1,0 +1,236 @@
+"""Pluggable execution backends — the repro analogue of LAPIS's Kokkos
+backends (paper §3: "a dialect built on the principles of the Kokkos
+ecosystem allows extensibility of the framework to new architectures").
+
+A :class:`Backend` bundles everything the compiler needs to know about one
+architecture / lowering strategy:
+
+* a **name** (``"xla"``, ``"pallas"``, ``"loops"``, …) used as the value of
+  ``CompileOptions.target``;
+* **capability flags** (``"library"``, ``"custom-kernels"``,
+  ``"loop-nests"``, …) that passes query instead of comparing target
+  strings;
+* a **pipeline spec** — the ordered pass names ``PassManager`` runs for this
+  backend (the per-target lowering composition of the paper's Table 4.2);
+* **per-op kernel registrations** in a central ``opname → {backend: fn}``
+  table (:func:`register_kernel`), the Kokkos-Kernels interception surface;
+* an optional **selector hook** implementing a cost/choice model per op
+  (the linalg-to-kokkoskernels library-vs-generated-loops decision);
+* an optional **op executor hook** letting the backend claim whole IR ops
+  at emit time (how the ``loops`` reference backend interprets
+  ``tpu.grid_parallel`` nests without Pallas).
+
+Backends register themselves via :func:`register_backend`; third-party
+backends live in the ``repro.backends`` plugin package, which
+:func:`load_plugins` imports on first use.  All registration paths are
+idempotent (module-import semantics — no mutable "loaded" flags), so test
+re-imports and repeated ``available_targets()`` calls are safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Optional
+
+# Pass-name pipelines (resolved by repro.core.passmgr at run time).
+# TENSOR_PIPELINE keeps elementwise/reduction ops at tensor level where the
+# library's own fusion wins; LOWERED_PIPELINE adds the
+# dense-linalg-to-parallel-loops lowering for backends that execute explicit
+# loop nests (paper: OpenMP vs CUDA lowerings differ per target too).
+TENSOR_PIPELINE = ("fuse_elementwise", "linalg_to_library",
+                   "tile_mapping", "dualview_management")
+LOWERED_PIPELINE = ("fuse_elementwise", "linalg_to_library",
+                    "linalg_to_loops", "tile_mapping",
+                    "dualview_management")
+
+# Ops for which the library path is known hand-optimized (paper: "operations
+# that we know are hand-optimized" get intercepted with library calls).
+LIBRARY_PREFERRED = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.conv2d"}
+
+# Backend every selection chain ends on: the library path can execute any op.
+DEFAULT_FALLBACK = "xla"
+
+PLUGIN_PACKAGE = "repro.backends"
+
+_BACKENDS: dict = {}             # name -> Backend
+_KERNELS: dict = {}              # opname -> {backend name: fn}
+
+
+class UnknownBackendError(KeyError):
+    """Raised when ``CompileOptions.target`` names no registered backend."""
+
+
+@dataclasses.dataclass
+class Backend:
+    """One execution backend (a Kokkos backend analogue).
+
+    ``selector``, ``op_executor`` and ``kernel_predicate`` are plain
+    callables rather than subclass methods so a backend is a declarative
+    record a plugin can assemble without inheriting from core classes.
+    """
+
+    name: str
+    description: str = ""
+    capabilities: frozenset = frozenset()
+    pipeline: tuple = TENSOR_PIPELINE
+    fallbacks: tuple = ()                    # tried in order after `name`
+    loader: Optional[Callable] = None        # imports kernel modules (idempotent)
+    selector: Optional[Callable] = None      # (backend, opname, options) -> name
+    op_executor: Optional[Callable] = None   # (op, options) -> callable | None
+    kernel_predicate: Optional[Callable] = None  # (options) -> bool
+    passes_interpret: bool = False           # impls take an `interpret=` kwarg
+
+    def ensure_loaded(self) -> None:
+        """Run the deferred kernel-module import.  Loaders import modules,
+        so repeated calls are no-ops via ``sys.modules`` — no flag state."""
+        if self.loader is not None:
+            self.loader()
+
+    def kernel(self, opname: str) -> Optional[Callable]:
+        return _KERNELS.get(opname, {}).get(self.name)
+
+    def registered_ops(self) -> list:
+        self.ensure_loaded()
+        return sorted(op for op, impls in _KERNELS.items()
+                      if self.name in impls)
+
+    def fallback_chain(self) -> tuple:
+        """Selection order for this backend's ops: itself, its declared
+        fallbacks, then the library (which can execute any op)."""
+        chain, seen = [], set()
+        for name in (self.name,) + tuple(self.fallbacks) + (DEFAULT_FALLBACK,):
+            if name not in seen:
+                seen.add(name)
+                chain.append(name)
+        return tuple(chain)
+
+    def select_impl(self, opname: str, options) -> str:
+        """Pick the backend whose implementation of ``opname`` runs — the
+        paper's library-call-vs-generated-code decision.  The default walks
+        the fallback chain; a ``selector`` hook overrides it."""
+        if self.selector is not None:
+            return self.selector(self, opname, options)
+        chain = self.fallback_chain()
+        for name in chain:
+            b = _BACKENDS.get(name)
+            if b is None:
+                continue
+            b.ensure_loaded()
+            if b.kernel(opname) is not None:
+                return name
+        return DEFAULT_FALLBACK
+
+    def wants_kernels(self, options) -> bool:
+        """Should model-facing wrappers (attention, rwkv6, …) run this
+        backend's hand-written kernels instead of the jnp oracle?"""
+        if self.kernel_predicate is not None:
+            return self.kernel_predicate(options)
+        return "custom-kernels" in self.capabilities
+
+    def has_capability(self, cap: str) -> bool:
+        return cap in self.capabilities
+
+
+# ---------------------------------------------------------------------------
+# registration + lookup
+# ---------------------------------------------------------------------------
+
+def register_backend(backend: Backend) -> Backend:
+    """Idempotent: re-registering a name replaces the entry, so plugin
+    modules can run their registration at import time and survive
+    re-imports."""
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def register_kernel(opname: str, backend_name: str,
+                    fn: Optional[Callable] = None):
+    """Register an implementation of ``opname`` for ``backend_name``.
+    Usable directly or as a decorator; the backend need not be registered
+    yet (kernel modules and backend plugins import in either order)."""
+    if fn is None:
+        def deco(f: Callable) -> Callable:
+            _KERNELS.setdefault(opname, {})[backend_name] = f
+            return f
+        return deco
+    _KERNELS.setdefault(opname, {})[backend_name] = fn
+    return fn
+
+
+def load_plugins() -> None:
+    """Import the backend plugin package (idempotent via ``sys.modules``).
+    Adding an architecture = dropping a module into ``repro/backends/`` —
+    core files never enumerate backend names."""
+    importlib.import_module(PLUGIN_PACKAGE)
+
+
+def get_backend(name: str) -> Backend:
+    load_plugins()
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def resolve(target: str) -> Backend:
+    """``CompileOptions.target`` string → Backend object."""
+    return get_backend(target)
+
+
+def available_backends() -> list:
+    load_plugins()
+    return sorted(_BACKENDS)
+
+
+def all_backends() -> list:
+    load_plugins()
+    return [_BACKENDS[n] for n in sorted(_BACKENDS)]
+
+
+def available_targets(opname: str) -> list:
+    """All backend names with an implementation registered for ``opname``."""
+    load_plugins()
+    for b in _BACKENDS.values():
+        b.ensure_loaded()
+    return sorted(_KERNELS.get(opname, {}))
+
+
+def kernel_callable(opname: str, impl_name: str, options) -> Callable:
+    """Resolve ``opname`` on ``impl_name`` to a ready-to-call function,
+    applying the fallback chain and the backend's interpret policy."""
+    load_plugins()
+    b = _BACKENDS.get(impl_name)
+    if b is not None:
+        b.ensure_loaded()
+    table = _KERNELS.get(opname)
+    if not table:
+        for other in _BACKENDS.values():
+            other.ensure_loaded()
+        table = _KERNELS.get(opname)
+        if not table:
+            raise KeyError(f"no implementations registered for {opname}")
+    chosen, fn = impl_name, table.get(impl_name)
+    if fn is None:
+        chain = (b.fallback_chain() if b is not None
+                 else (impl_name, DEFAULT_FALLBACK))
+        for name in chain:
+            fb = _BACKENDS.get(name)
+            if fb is not None:
+                fb.ensure_loaded()   # lazily-registered impls count too
+            if name in table:
+                chosen, fn = name, table[name]
+                break
+        else:
+            # never silently run an arbitrary backend's kernel — a miss
+            # here is a registration bug worth surfacing (seed parity)
+            raise KeyError(
+                f"no implementation of {opname} for backend "
+                f"{impl_name!r} or its fallbacks {chain}; registered: "
+                f"{sorted(table)}")
+    impl_backend = _BACKENDS.get(chosen)
+    if impl_backend is not None and impl_backend.passes_interpret:
+        interpret = options.resolve_interpret()
+        return lambda *a, **kw: fn(*a, interpret=interpret, **kw)
+    return fn

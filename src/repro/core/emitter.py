@@ -61,6 +61,13 @@ def _grid_parallel_callable(op: Op, options: CompileOptions) -> Callable:
 
 def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
     from repro.core import registry
+    # a backend may claim any op outright (e.g. the `loops` reference
+    # backend interprets tpu.grid_parallel nests in pure jnp, no Pallas)
+    backend = options.backend()
+    if backend.op_executor is not None:
+        ex = backend.op_executor(op, options)
+        if ex is not None:
+            return ex
     if op.opname == "kk.fused_elementwise":
         return op.attrs["fn"]  # XLA fuses the composed closure
     if op.opname.startswith("kk."):
@@ -355,14 +362,25 @@ def emit_python_source(graph: Graph,
                 body.append(f"{res} = _WEIGHTS[{key!r}]")
             continue
         if op.opname == "tpu.grid_parallel":
-            # source path uses library semantics for generic loops
-            fn_src = _SRC_OPS.get(op.attrs.get("src", ""))
+            # source path uses library semantics for generic loops: emit the
+            # original tensor-level op recorded in attrs["src"] (attr-aware
+            # ops like softmax go through _src_line via a proxy op)
+            src_name = op.attrs.get("src", "")
+            fn_src = _SRC_OPS.get(src_name)
             a = [names[o.id] for o in op.operands]
             res = names[op.results[0].id]
-            if fn_src is None:
-                raise NotImplementedError(
-                    f"source emission for grid_parallel({op.attrs.get('src')})")
-            body.append(f"{res} = {fn_src.format(*a)}")
+            if fn_src is not None:
+                body.append(f"{res} = {fn_src.format(*a)}")
+            else:
+                proxy = Op(src_name, op.operands,
+                           [r.type for r in op.results],
+                           attrs={k: v for k, v in op.attrs.items()
+                                  if k not in ("fn", "tiling", "kind",
+                                               "iter_space", "level_map",
+                                               "src", "ops")})
+                for pr, rr in zip(proxy.results, op.results):
+                    names[pr.id] = names[rr.id]
+                body.append(_src_line(proxy, names))
             continue
         body.append(_src_line(op, names))
 

@@ -1,7 +1,10 @@
 """Compile options — the repro analogue of LAPIS's pipeline flags.
 
-``target`` selects the execution backend the same way LAPIS selects a Kokkos
-backend at compile time:
+``target`` names a registered execution backend the same way LAPIS selects
+a Kokkos backend at compile time.  It is a lookup key into the backend
+registry (``repro.core.backend``), resolved by :meth:`CompileOptions.backend`
+— never compared as a string outside the backend layer.  Built-ins (from
+the ``repro.backends`` plugin package):
 
 * ``"xla"``      — lower matmul-like ops to library calls (XLA dot_general —
                    the TPU "vendor library", cuBLAS analogue) and everything
@@ -12,6 +15,9 @@ backend at compile time:
 * ``"auto"``     — per-op heuristic choice (library for the ops known to be
                    hand-optimized, Pallas/loops for the rest) — the paper's
                    default pipeline behaviour.
+* ``"loops"``    — pure-jnp loop-nest reference interpreter (the paper's
+                   generated-Kokkos-loops path), registered entirely through
+                   the plugin API.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ import jax
 
 @dataclasses.dataclass
 class CompileOptions:
-    target: str = "auto"                 # "xla" | "pallas" | "auto"
+    target: str = "auto"                 # registered backend name
     interpret: Optional[bool] = None     # None -> True iff no TPU present
     prefer_library: bool = True          # linalg-to-kokkoskernels on/off
     fuse_elementwise: bool = True        # beyond-paper fusion pass
@@ -37,11 +43,18 @@ class CompileOptions:
     sublane_width: int = 8
     mxu_dim: int = 128                   # MXU systolic array edge
     donate_buffers: bool = True
+    verify_ir: bool = False              # PassManager: verify SSA per pass
+    print_ir_after_all: bool = False     # PassManager: dump IR per pass
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:
             return self.interpret
         return jax.default_backend() != "tpu"
+
+    def backend(self):
+        """Resolve ``target`` to its registered Backend object."""
+        from repro.core import backend as backend_mod
+        return backend_mod.resolve(self.target)
 
 
 _tls = threading.local()

@@ -17,6 +17,7 @@ Pass order (mirrors the paper's pipeline):
 """
 from __future__ import annotations
 
+import collections
 import math
 from typing import Optional
 
@@ -26,6 +27,7 @@ from repro.core import refs
 from repro.core.ir import (Graph, LINALG_ELEMENTWISE, LINALG_MATMUL_LIKE,
                            LINALG_REDUCTION, MemorySpace, Op, TensorType)
 from repro.core.options import CompileOptions, current_options
+from repro.core.passmgr import PassManager, register_pass
 
 # ---------------------------------------------------------------------------
 # 1. elementwise fusion (beyond paper — XLA-style producer/consumer fusion)
@@ -34,38 +36,71 @@ from repro.core.options import CompileOptions, current_options
 _FUSABLE = LINALG_ELEMENTWISE | {"kk.fused_elementwise"}
 
 
+@register_pass()
 def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
                      ) -> int:
     """Fuse producer→consumer chains of elementwise ops where the
-    intermediate value has exactly one use.  Returns #fusions performed."""
+    intermediate value has exactly one use.  Returns #fusions performed.
+
+    Worklist formulation: the users map is built once and maintained
+    incrementally, only the newly fused op is re-enqueued (a fusion can
+    enable no other new pair — use counts of uninvolved values never
+    change and op kinds never become fusable), and list surgery is O(1)
+    per fusion (position map + tombstones compacted once).  The seed
+    re-walked the whole op list from the top after every single fusion
+    (O(n²) restarts).
+    """
     options = options or current_options()
     if not options.fuse_elementwise:
         return 0
     fused = 0
-    changed = True
-    while changed:
-        changed = False
-        users = graph.users()
-        for op in graph.ops:
-            if op.opname not in _FUSABLE:
-                continue
-            uses = users.get(op.results[0].id, [])
-            if len(uses) != 1:
-                continue
-            user_op, operand_idx = uses[0]
-            if user_op is None or user_op.opname not in _FUSABLE:
-                continue
-            if user_op.results[0].shape != op.results[0].shape:
-                continue  # only same-shape chains (no broadcast re-analysis)
-            _fuse_pair(graph, op, user_op, operand_idx)
-            fused += 1
-            changed = True
-            break
+    users = graph.users()
+    pos = {id(op): i for i, op in enumerate(graph.ops)}
+    worklist = collections.deque(op for op in graph.ops
+                                 if op.opname in _FUSABLE)
+    while worklist:
+        op = worklist.popleft()
+        if id(op) not in pos:
+            continue                        # fused away earlier
+        uses = users.get(op.results[0].id, [])
+        if len(uses) != 1:
+            continue
+        user_op, operand_idx = uses[0]
+        if user_op is None or user_op.opname not in _FUSABLE:
+            continue
+        if user_op.results[0].shape != op.results[0].shape:
+            continue  # only same-shape chains (no broadcast re-analysis)
+        new = _build_fused_op(op, user_op, operand_idx)
+        # O(1) surgery: the fused op takes the consumer's slot; the
+        # producer's slot becomes a tombstone compacted after the loop
+        graph.ops[pos[id(user_op)]] = new
+        pos[id(new)] = pos.pop(id(user_op))
+        graph.ops[pos.pop(id(op))] = None
+        # targeted rewire: the fused op takes over the consumer's uses …
+        taken = users.pop(user_op.results[0].id, [])
+        for use_op, i in taken:
+            if use_op is None:
+                graph.outputs[i] = new.results[0]
+            else:
+                use_op.operands[i] = new.results[0]
+        users[new.results[0].id] = taken
+        users.pop(op.results[0].id, None)   # fused-away internal edge
+        # … and becomes the user of its operands at the merged indices
+        rebuilt = set()
+        for i, v in enumerate(new.operands):
+            if v.id not in rebuilt:
+                rebuilt.add(v.id)
+                users[v.id] = [u for u in users.get(v.id, [])
+                               if u[0] is not op and u[0] is not user_op]
+            users[v.id].append((new, i))
+        fused += 1
+        worklist.append(new)
+    if fused:
+        graph.ops = [o for o in graph.ops if o is not None]
     return fused
 
 
-def _fuse_pair(graph: Graph, producer: Op, consumer: Op,
-               operand_idx: int) -> None:
+def _build_fused_op(producer: Op, consumer: Op, operand_idx: int) -> Op:
     p_fn = refs.op_ref(producer.opname, producer.attrs)
     c_fn = refs.op_ref(consumer.opname, consumer.attrs)
     n_p = len(producer.operands)
@@ -78,15 +113,22 @@ def _fuse_pair(graph: Graph, producer: Op, consumer: Op,
 
     operands = list(producer.operands) + [
         v for j, v in enumerate(consumer.operands) if j != operand_idx]
-    new = Op("kk.fused_elementwise", operands,
-             [consumer.results[0].type],
-             attrs={"fn": fn,
-                    "ops": (producer.attrs.get("ops", (producer.opname,)) +
-                            consumer.attrs.get("ops", (consumer.opname,)))})
-    # place the fused op at the consumer's position, drop the producer
+    return Op("kk.fused_elementwise", operands,
+              [consumer.results[0].type],
+              attrs={"fn": fn,
+                     "ops": (producer.attrs.get("ops", (producer.opname,)) +
+                             consumer.attrs.get("ops", (consumer.opname,)))})
+
+
+def _fuse_pair(graph: Graph, producer: Op, consumer: Op,
+               operand_idx: int) -> Op:
+    """Seed-semantics fusion step (full-graph rewire) — kept as the
+    oracle the worklist pass is tested against."""
+    new = _build_fused_op(producer, consumer, operand_idx)
     graph.ops[graph.ops.index(consumer)] = new
     graph.ops.remove(producer)
     graph._rewire({consumer.results[0]: new.results[0]})
+    return new
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +143,7 @@ _TO_KK = {
 }
 
 
+@register_pass()
 def linalg_to_library(graph: Graph,
                       options: Optional[CompileOptions] = None) -> int:
     """Replace recognized linear-algebra ops with ``kk.*`` library-call ops
@@ -128,15 +171,17 @@ def linalg_to_library(graph: Graph,
 _LOOPABLE = LINALG_ELEMENTWISE | LINALG_REDUCTION | {"kk.fused_elementwise"}
 
 
+@register_pass()
 def linalg_to_loops(graph: Graph,
                     options: Optional[CompileOptions] = None) -> int:
     """Lower remaining dense elementwise/reduction ops to ``loops.parallel``
-    nests over their iteration space.  Only runs for the ``pallas`` target —
-    under ``xla``/``auto`` these ops stay at tensor level where XLA's own
-    fusion is the better "backend" (the paper keeps such choices per-target
-    too: OpenMP vs CUDA lowerings differ)."""
+    nests over their iteration space.  Only runs for backends with the
+    ``loop-nests`` capability (pallas, loops) — on library backends these
+    ops stay at tensor level where XLA's own fusion is the better "backend"
+    (the paper keeps such choices per-target too: OpenMP vs CUDA lowerings
+    differ)."""
     options = options or current_options()
-    if options.target != "pallas":
+    if not options.backend().has_capability("loop-nests"):
         return 0
     lowered = 0
     for op in list(graph.ops):
@@ -254,6 +299,7 @@ def choose_map_blocks(shape: tuple, itemsize: int, n_operands: int,
     return {"block": tuple(block), "grid": grid}
 
 
+@register_pass()
 def tile_mapping(graph: Graph,
                  options: Optional[CompileOptions] = None) -> int:
     """Annotate ``kk.*`` ops with heuristic tiling attrs and convert
@@ -325,6 +371,7 @@ def tile_mapping(graph: Graph,
 _DEVICE_COMPUTE = {"kk", "tpu", "loops", "linalg", "tensor"}
 
 
+@register_pass()
 def dualview_management(graph: Graph,
                         options: Optional[CompileOptions] = None) -> int:
     """Assign memory spaces and insert lazy sync/modify ops (paper §4.3).
@@ -385,17 +432,12 @@ def dualview_management(graph: Graph,
 # pipeline driver (lapis-opt)
 # ---------------------------------------------------------------------------
 
-PIPELINE = (fuse_elementwise, linalg_to_library, linalg_to_loops,
-            tile_mapping, dualview_management)
-
-
 def run_pipeline(graph: Graph,
                  options: Optional[CompileOptions] = None) -> Graph:
-    """``lapis-opt --sparse-compiler-kokkos`` analogue: run all passes."""
+    """``lapis-opt --sparse-compiler-kokkos`` analogue: run the resolved
+    backend's pipeline through the PassManager."""
     options = options or current_options()
-    stats = {}
-    for p in PIPELINE:
-        stats[p.__name__] = p(graph, options)
-    graph.dce()
-    graph.pipeline_stats = stats
-    return graph
+    pm = PassManager(options.backend().pipeline,
+                     verify=options.verify_ir,
+                     print_ir_after_all=options.print_ir_after_all)
+    return pm.run(graph, options)

@@ -1,0 +1,136 @@
+"""PassManager — named, composable lowering pipelines (lapis-opt's driver).
+
+The seed hardcoded one module-level ``PIPELINE`` tuple for every target;
+here passes register by name (:func:`register_pass`) and each
+:class:`~repro.core.backend.Backend` declares its pipeline as an ordered
+tuple of those names, so per-target composition is data, not code — the
+paper's per-backend pass sequencing (Table 4.2) made explicit.
+
+The manager also carries the debugging machinery MLIR's pass manager has
+and the seed lacked: per-pass wall time and op-count statistics
+(``graph.pass_stats``), optional SSA verification between passes
+(``verify=True``), and ``print_ir_after_all`` IR dumps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+from repro.core.ir import Graph
+from repro.core.options import CompileOptions, current_options
+
+_PASSES: dict = {}               # name -> pass fn(graph, options) -> int
+
+
+class IRVerificationError(RuntimeError):
+    """The graph violated SSA form after a pass."""
+
+
+def register_pass(name: Optional[str] = None):
+    """Decorator registering a pass under ``name`` (default: fn name).
+    Idempotent — re-registration replaces the entry, keeping re-imports
+    safe.  A pass is ``fn(graph, options) -> int`` (rewrite count)."""
+    def deco(fn: Callable) -> Callable:
+        pname = name or fn.__name__
+        fn.pass_name = pname
+        _PASSES[pname] = fn
+        return fn
+    return deco
+
+
+def get_pass(name: str) -> Callable:
+    if name not in _PASSES:
+        # builtin passes register on import of repro.core.passes
+        import repro.core.passes  # noqa: F401
+    try:
+        return _PASSES[name]
+    except KeyError:
+        raise KeyError(f"unknown pass {name!r}; registered: "
+                       f"{registered_passes()}") from None
+
+
+def registered_passes() -> list:
+    import repro.core.passes  # noqa: F401
+    return sorted(_PASSES)
+
+
+@dataclasses.dataclass
+class PassStat:
+    """Per-pass record: what ran, what it did, and what it cost."""
+
+    name: str
+    rewrites: int
+    seconds: float
+    ops_before: int
+    ops_after: int
+
+
+def verify_graph(graph: Graph) -> None:
+    """Check SSA form: every top-level operand/output is defined by a graph
+    input or an earlier op (MLIR's between-pass verifier analogue)."""
+    defined = {v.id for v in graph.inputs}
+    for op in graph.ops:
+        for o in op.operands:
+            if o.id not in defined:
+                raise IRVerificationError(
+                    f"op {op!r} uses {o!r} before definition")
+        for r in op.results:
+            defined.add(r.id)
+        for region in op.regions:
+            for v in region.walk():
+                for r in v.results:
+                    defined.add(r.id)
+    for v in graph.outputs:
+        if v.id not in defined:
+            raise IRVerificationError(f"graph output {v!r} is undefined")
+
+
+class PassManager:
+    """Run an ordered pipeline of registered passes over a graph.
+
+    ``pipeline`` entries are pass names (or bare callables, for tests);
+    the default is the resolved backend's pipeline spec.
+    """
+
+    def __init__(self, pipeline: Optional[Sequence] = None, *,
+                 verify: bool = False, print_ir_after_all: bool = False,
+                 sink: Callable = print):
+        self.pipeline = tuple(pipeline) if pipeline is not None else None
+        self.verify = verify
+        self.print_ir_after_all = print_ir_after_all
+        self.sink = sink
+
+    def _resolved_pipeline(self, options: CompileOptions) -> tuple:
+        if self.pipeline is not None:
+            return self.pipeline
+        return options.backend().pipeline
+
+    def run(self, graph: Graph,
+            options: Optional[CompileOptions] = None) -> Graph:
+        options = options or current_options()
+        stats: dict = {}
+        records: list = []
+        for entry in self._resolved_pipeline(options):
+            fn = entry if callable(entry) else get_pass(entry)
+            name = getattr(fn, "pass_name", getattr(fn, "__name__", str(fn)))
+            ops_before = len(graph.ops)
+            t0 = time.perf_counter()
+            rewrites = int(fn(graph, options) or 0)
+            records.append(PassStat(name=name, rewrites=rewrites,
+                                    seconds=time.perf_counter() - t0,
+                                    ops_before=ops_before,
+                                    ops_after=len(graph.ops)))
+            stats[name] = rewrites
+            if self.print_ir_after_all:
+                self.sink(f"// ----- IR after {name} "
+                          f"({rewrites} rewrites) -----")
+                self.sink(str(graph))
+            if self.verify:
+                verify_graph(graph)
+        graph.dce()
+        if self.verify:
+            verify_graph(graph)
+        graph.pipeline_stats = stats      # name -> rewrite count (seed shape)
+        graph.pass_stats = records        # rich per-pass records
+        return graph

@@ -16,6 +16,7 @@ from typing import Callable, Optional, Sequence
 
 import jax
 
+from repro.core import backend as backend_mod
 from repro.core import emitter, passes, tracer
 from repro.core.ir import Graph
 from repro.core.options import CompileOptions, current_options, use_options
@@ -105,14 +106,29 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description="LAPIS pipeline driver")
     p.add_argument("--demo", default="mlp", choices=["mlp"])
     p.add_argument("--target", default="auto",
-                   choices=["auto", "xla", "pallas"])
+                   choices=backend_mod.available_backends(),
+                   help="execution backend (any registered plugin)")
     p.add_argument("--emit", default=None, help="write Python source here")
     p.add_argument("--print-ir", action="store_true")
+    p.add_argument("--print-ir-after-all", action="store_true",
+                   help="dump IR after every pass (PassManager)")
+    p.add_argument("--list-backends", action="store_true",
+                   help="list registered backends and exit")
     args = p.parse_args(argv)
+
+    if args.list_backends:
+        for b in backend_mod.all_backends():
+            caps = ",".join(sorted(b.capabilities)) or "-"
+            print(f"{b.name:8s}  caps=[{caps}]  "
+                  f"pipeline=[{' -> '.join(b.pipeline)}]")
+            if b.description:
+                print(f"{'':8s}  {b.description}")
+        return 0
 
     fn, specs = _demo_mlp()
     opts = CompileOptions(target=args.target,
-                          fuse_elementwise=args.emit is None)
+                          fuse_elementwise=args.emit is None,
+                          print_ir_after_all=args.print_ir_after_all)
     mod = compile(fn, *specs, options=opts)
     if args.print_ir:
         print(mod.print_ir())

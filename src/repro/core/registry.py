@@ -1,82 +1,47 @@
 """Kernel implementation registry — the repro analogue of Kokkos Kernels.
 
-Every ``kk.*`` dialect op has one or more registered implementations:
+This module is now a thin facade over the pluggable backend layer
+(``repro.core.backend``): implementations register per backend name via
+:func:`register`, and selection/dispatch delegate to the resolved
+:class:`~repro.core.backend.Backend`'s fallback chain and selector hook —
+exactly the paper's choice between generating a portable Kokkos loop nest
+and intercepting the op with a Kokkos Kernels library call (§4, Table 4.2),
+but extensible to any registered backend instead of two hardcoded strings.
 
-* ``"xla"``    — pure jnp/lax ("vendor library" path; TPU's cuBLAS is the XLA
-                 MXU lowering of dot_general).
-* ``"pallas"`` — our hand-tiled Pallas kernel (the pure-Kokkos lowering path).
-
-Selection happens at emit/dispatch time from ``CompileOptions`` — exactly the
-paper's choice between generating a portable Kokkos loop nest and intercepting
-the op with a Kokkos Kernels library call (§4, Table 4.2).
+Kernel modules load lazily through each backend's ``loader`` (a module
+import — idempotent via ``sys.modules``, replacing the old mutable
+``_PALLAS_LOADED`` flag), so repeated ``available_targets()`` calls and
+test re-imports are safe.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
+from repro.core import backend as _backend
+from repro.core.backend import LIBRARY_PREFERRED  # noqa: F401  (re-export)
 from repro.core.options import CompileOptions, current_options
-
-_REGISTRY: dict = {}       # opname -> {target: fn}
-_PALLAS_LOADED = [False]
-
-# Ops for which the library path is known hand-optimized (paper: "operations
-# that we know are hand-optimized" get intercepted with library calls).
-LIBRARY_PREFERRED = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.conv2d"}
 
 
 def register(opname: str, target: str) -> Callable:
-    def deco(fn: Callable) -> Callable:
-        _REGISTRY.setdefault(opname, {})[target] = fn
-        return fn
-    return deco
-
-
-def _ensure_pallas_loaded() -> None:
-    if not _PALLAS_LOADED[0]:
-        _PALLAS_LOADED[0] = True
-        import repro.kernels.ops  # noqa: F401  (registers pallas impls)
+    """Decorator: register ``fn`` as ``target``'s implementation of
+    ``opname`` (kept from the seed API; kernels modules use it)."""
+    return _backend.register_kernel(opname, target)
 
 
 def available_targets(opname: str) -> list:
-    _ensure_pallas_loaded()
-    return sorted(_REGISTRY.get(opname, {}))
+    return _backend.available_targets(opname)
 
 
-def select_target(opname: str, options: Optional[CompileOptions] = None) -> str:
-    """The linalg-to-kokkoskernels decision: library call or custom kernel."""
+def select_target(opname: str, options: Optional[CompileOptions] = None
+                  ) -> str:
+    """The linalg-to-kokkoskernels decision: library call or custom kernel.
+    Delegates to the resolved backend's selector / fallback chain."""
     options = options or current_options()
-    impls = _REGISTRY.get(opname, {})
-    if options.target == "xla":
-        return "xla"
-    if options.target == "pallas":
-        _ensure_pallas_loaded()
-        impls = _REGISTRY.get(opname, {})
-        return "pallas" if "pallas" in impls else "xla"
-    # auto: prefer the library for known-optimized ops; Pallas for the rest
-    # when a real TPU backs it (on CPU hosts interpret-mode kernels are a
-    # validation tool, not a performance path — auto stays on the library).
-    if options.prefer_library and opname in LIBRARY_PREFERRED:
-        return "xla"
-    import jax
-    if jax.default_backend() != "tpu" and options.interpret is not True:
-        return "xla"
-    _ensure_pallas_loaded()
-    impls = _REGISTRY.get(opname, {})
-    return "pallas" if "pallas" in impls else "xla"
+    return options.backend().select_impl(opname, options)
 
 
 def dispatch(opname: str, options: Optional[CompileOptions] = None,
              target: Optional[str] = None) -> Callable:
     options = options or current_options()
-    _ensure_pallas_loaded()
-    target = target or select_target(opname, options)
-    impls = _REGISTRY.get(opname)
-    if not impls:
-        raise KeyError(f"no implementations registered for {opname}")
-    if target not in impls:
-        target = "xla"
-    fn = impls[target]
-    if target == "pallas":
-        interpret = options.resolve_interpret()
-        return lambda *a, **kw: fn(*a, interpret=interpret, **kw)
-    return fn
+    impl = target or select_target(opname, options)
+    return _backend.kernel_callable(opname, impl, options)

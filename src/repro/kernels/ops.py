@@ -147,12 +147,11 @@ def spmv_pallas(indptr, indices, values, x, *, n_rows, tiling=None,
 # ---------------------------------------------------------------------------
 
 def _use_pallas(options: Optional[CompileOptions]) -> bool:
+    """Backend-policy query: hand-written kernels or the jnp oracle?
+    (``pallas`` → always kernels; ``auto`` → kernels iff a real TPU backs
+    them; library/reference backends → oracle.)"""
     options = options or current_options()
-    if options.target == "pallas":
-        return True
-    if options.target == "xla":
-        return False
-    return jax.default_backend() == "tpu"
+    return options.backend().wants_kernels(options)
 
 
 CHUNKED_ATTN_THRESHOLD = 2048     # longest S computed as one dense block

@@ -113,3 +113,80 @@ def test_full_pipeline_stats():
                (16, 32), (32, 64))
     passes.run_pipeline(g)
     assert g.pipeline_stats["linalg_to_library"] == 1
+    # PassManager also records rich per-pass stats alongside the seed dict
+    assert [s.name for s in g.pass_stats] == list(g.pipeline_stats)
+    assert all(s.seconds >= 0 for s in g.pass_stats)
+
+
+# ---------------------------------------------------------------------------
+# worklist fusion ≡ the seed's restart-scan (identical fusion counts)
+# ---------------------------------------------------------------------------
+
+def _restart_scan_fusion(graph):
+    """The seed's O(n²) algorithm: re-walk the op list from the top after
+    every single fusion.  Kept here as the oracle for the worklist pass."""
+    fused = 0
+    changed = True
+    while changed:
+        changed = False
+        users = graph.users()
+        for op in graph.ops:
+            if op.opname not in passes._FUSABLE:
+                continue
+            uses = users.get(op.results[0].id, [])
+            if len(uses) != 1:
+                continue
+            user_op, operand_idx = uses[0]
+            if user_op is None or user_op.opname not in passes._FUSABLE:
+                continue
+            if user_op.results[0].shape != op.results[0].shape:
+                continue
+            passes._fuse_pair(graph, op, user_op, operand_idx)
+            fused += 1
+            changed = True
+            break
+    return fused
+
+
+_FUSION_GRAPHS = [
+    ("chain+sidechain", lambda x: ops.mul(ops.relu(ops.add(x, x)),
+                                          ops.sigmoid(x))),
+    ("multi-use", lambda x: ops.add(ops.relu(x), ops.sigmoid(ops.relu(x)))),
+    ("long-chain", lambda x: ops.relu(ops.sigmoid(ops.tanh(ops.exp(
+        ops.neg(x)))))),
+    ("two-chains", lambda x: ops.mul(ops.relu(ops.neg(x)),
+                                     ops.tanh(ops.exp(x)))),
+]
+
+
+@pytest.mark.parametrize("name,fn", _FUSION_GRAPHS,
+                         ids=[n for n, _ in _FUSION_GRAPHS])
+def test_worklist_fusion_count_matches_restart_scan(name, fn):
+    with use_options(CompileOptions(fuse_elementwise=True)):
+        g_new = _trace(fn, (4, 8))
+        n_new = passes.fuse_elementwise(g_new)
+        g_ref = _trace(fn, (4, 8))
+        n_ref = _restart_scan_fusion(g_ref)
+    assert n_new == n_ref
+    g_new.dce()
+    g_ref.dce()
+    assert (sorted(op.opname for op in g_new.ops) ==
+            sorted(op.opname for op in g_ref.ops))
+
+
+def test_worklist_fusion_preserves_semantics(rng):
+    def fn(x):
+        return ops.mul(ops.relu(ops.add(x, x)), ops.sigmoid(x))
+
+    import jax.numpy as jnp
+    from repro.core import emitter
+    x = rng.standard_normal((4, 8)).astype(np.float32)
+    with use_options(CompileOptions(fuse_elementwise=True)) as opts:
+        g = _trace(fn, (4, 8))
+        n = passes.fuse_elementwise(g)
+        g.dce()
+        assert n >= 2
+        fused_out = emitter.build_callable(g, opts)(x)
+    expect = np.maximum(x + x, 0) * (1 / (1 + np.exp(-x)))
+    np.testing.assert_allclose(np.asarray(fused_out), expect, rtol=1e-5,
+                               atol=1e-6)
