@@ -11,9 +11,10 @@ import numpy as np
 from benchmarks.common import row, time_fn
 
 CASES = ((256, 16), (256, 32), (64, 64), (16, 128))
+SMOKE_CASES = ((16, 16), (8, 32))
 
 
-def main(print_rows=True):
+def main(print_rows=True, smoke=False):
     import jax
     import jax.numpy as jnp
 
@@ -23,7 +24,7 @@ def main(print_rows=True):
 
     rng = np.random.default_rng(0)
     out = []
-    for bsz, m in CASES:
+    for bsz, m in (SMOKE_CASES if smoke else CASES):
         a = rng.standard_normal((bsz, m, m), dtype=np.float32)
         b = rng.standard_normal((bsz, m, m), dtype=np.float32)
         small = m * m <= 128 * 128 // 4

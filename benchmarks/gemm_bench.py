@@ -11,11 +11,13 @@ import numpy as np
 from benchmarks.common import row, time_fn
 
 
-def main(print_rows=True, n: int = 1024):
+def main(print_rows=True, n: int = 1024, smoke=False):
     import jax.numpy as jnp
 
     from repro.core import ops, pipeline
 
+    if smoke:
+        n = 256
     rng = np.random.default_rng(0)
     a = rng.standard_normal((n, n), dtype=np.float32)
     b = rng.standard_normal((n, n), dtype=np.float32)

@@ -12,22 +12,23 @@ from benchmarks.common import row, time_fn
 BATCH = 8748
 
 
-def main(print_rows=True):
+def main(print_rows=True, smoke=False):
     import jax
 
     from repro.core import pipeline
     from repro.models.resnet import init_mala_weights, mala_forward
 
+    batch = 512 if smoke else BATCH
     rng = np.random.default_rng(0)
     w = init_mala_weights(rng)
-    x = rng.standard_normal((BATCH, 91)).astype(np.float32)
+    x = rng.standard_normal((batch, 91)).astype(np.float32)
 
     mod = pipeline.compile(lambda xx: mala_forward(w, xx), x)
     direct = jax.jit(lambda xx: mala_forward(w, xx))
 
     t_lapis = time_fn(mod, x, reps=10)
     t_direct = time_fn(direct, x, reps=10)
-    out = [row("mala/lapis", t_lapis * 1e6, f"batch={BATCH}"),
+    out = [row("mala/lapis", t_lapis * 1e6, f"batch={batch}"),
            row("mala/direct", t_direct * 1e6,
                f"overhead={(t_lapis - t_direct) / t_direct * 100:+.1f}%")]
     if print_rows:

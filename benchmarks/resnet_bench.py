@@ -18,7 +18,7 @@ from benchmarks.common import row, time_fn
 BATCH, RES, WIDTH = 8, 64, 0.5
 
 
-def main(print_rows=True):
+def main(print_rows=True, smoke=False):
     from repro.core import pipeline
     from repro.core.dualview import TRANSFERS, reset_transfer_stats
     from repro.core.options import current_options
@@ -30,14 +30,15 @@ def main(print_rows=True):
         return dataclasses.replace(current_options(),
                                    fuse_elementwise=False, **overrides)
 
+    batch, res = (2, 32) if smoke else (BATCH, RES)
     rng = np.random.default_rng(0)
     w = init_resnet18_weights(rng, width_mult=WIDTH)
-    x = rng.standard_normal((BATCH, 3, RES, RES)).astype(np.float32)
+    x = rng.standard_normal((batch, 3, res, res)).astype(np.float32)
 
     mod = pipeline.compile(lambda xx: resnet18_forward(w, xx), x,
                            options=opts())
     probs = np.asarray(mod(x))
-    assert probs.shape == (BATCH, 1000) and np.allclose(
+    assert probs.shape == (batch, 1000) and np.allclose(
         probs.sum(-1), 1.0, atol=1e-3)
     t = time_fn(mod, x, reps=5)
 
@@ -61,7 +62,7 @@ def main(print_rows=True):
     eager_transfers = TRANSFERS["h2d"] + TRANSFERS["d2h"]
 
     out = [row("resnet18/lapis", t * 1e6,
-               f"batch={BATCH};res={RES};width={WIDTH}"),
+               f"batch={batch};res={res};width={WIDTH}"),
            row("resnet18/dualview_lazy", t_lazy * 1e6,
                f"transfers={lazy_transfers}"),
            row("resnet18/dualview_eager", t_eager * 1e6,

@@ -7,7 +7,10 @@ pipeline-driven section once per backend (inside ``use_options``), so
 backends are benchmarkable side by side — the paper's
 library-vs-generated-loops comparison generalized to any plugin
 (``--list-backends`` enumerates them).  Sections that drive kernels
-directly (spmv, bgemm, roofline) are target-independent and run once.
+directly (bgemm, roofline) are target-independent and run once; spmv
+compiles the sparse pipeline per backend.  ``--smoke`` shrinks every
+section to CI-sized problems (a pipeline-regression check, not a
+measurement).
 """
 from __future__ import annotations
 
@@ -22,6 +25,9 @@ def main(argv=None) -> int:
     p.add_argument("--targets", default=None,
                    help="comma list of backend names to benchmark side by "
                         "side (default: the ambient target)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny problem sizes — CI pipeline-regression "
+                        "check, not a measurement")
     p.add_argument("--list-backends", action="store_true",
                    help="list registered backends and exit")
     args = p.parse_args(argv)
@@ -48,11 +54,12 @@ def main(argv=None) -> int:
     from benchmarks import roofline as roofline_bench
 
     # last column: section goes through pipeline.compile and honors the
-    # ambient target (spmv/bgemm/roofline drive kernels directly, so
-    # re-running them per backend would just relabel identical numbers)
+    # ambient target (bgemm/roofline drive kernels directly, so re-running
+    # them per backend would just relabel identical numbers; spmv compiles
+    # the sparse pipeline per backend since PR 2)
     sections = [
         ("gemm", "Table 6.2 — SGEMM zero-overhead", gemm_bench.main, True),
-        ("spmv", "Fig 6.1 — SpMV, 4 matrices", spmv_bench.main, False),
+        ("spmv", "Fig 6.1 — SpMV, 4 matrices", spmv_bench.main, True),
         ("bgemm", "Fig 6.3 — batched GEMM", batched_gemm_bench.main, False),
         ("mala", "Fig 6.2a — MALA DNN inference", mala_bench.main, True),
         ("resnet", "Fig 6.2b — ResNet18 inference + DualView ablation",
@@ -64,6 +71,10 @@ def main(argv=None) -> int:
     for key, title, fn, target_aware in sections:
         if which and key not in which:
             continue
+        # every section main accepts smoke= — passed unconditionally so a
+        # section that forgets the kwarg fails loudly instead of silently
+        # running at full size under --smoke
+        kwargs = {"smoke": True} if args.smoke else {}
         for target in (targets if target_aware else [None]):
             if target is not None:
                 label = f" [target={target}]"
@@ -74,10 +85,10 @@ def main(argv=None) -> int:
             print(f"# {title}{label}")
             try:
                 if target is None:
-                    fn(print_rows=True)
+                    fn(print_rows=True, **kwargs)
                 else:
                     with use_options(CompileOptions(target=target)):
-                        fn(print_rows=True)
+                        fn(print_rows=True, **kwargs)
             except Exception as e:   # noqa: BLE001 — report all sections
                 failures += 1
                 tag = f"[{target}]" if target else ""

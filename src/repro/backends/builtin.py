@@ -37,7 +37,7 @@ register_backend(Backend(
     name="xla",
     description="XLA library path (TPU's cuBLAS: MXU dot_general; "
                 "linalg-to-kokkoskernels analogue)",
-    capabilities=frozenset({"library", "source-emission"}),
+    capabilities=frozenset({"library", "source-emission", "sparse"}),
     pipeline=TENSOR_PIPELINE,
     loader=_load_kernels,
 ))
@@ -45,7 +45,8 @@ register_backend(Backend(
 register_backend(Backend(
     name="pallas",
     description="hand-tiled Pallas kernels (the pure-Kokkos lowering path)",
-    capabilities=frozenset({"custom-kernels", "loop-nests"}),
+    capabilities=frozenset({"custom-kernels", "loop-nests", "sparse",
+                            "ell-layout"}),
     pipeline=LOWERED_PIPELINE,
     fallbacks=("xla",),
     loader=_load_kernels,
@@ -56,7 +57,7 @@ register_backend(Backend(
     name="auto",
     description="per-op heuristic: library for hand-optimized ops, "
                 "kernels elsewhere when a TPU backs them",
-    capabilities=frozenset({"library"}),
+    capabilities=frozenset({"library", "sparse"}),
     pipeline=TENSOR_PIPELINE,
     fallbacks=("xla",),
     loader=_load_kernels,

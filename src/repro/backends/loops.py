@@ -111,11 +111,50 @@ def _loops_executor(op, options):
     return None
 
 
+def _sparse_row_blocks(a, dense, reference, tiling, max_nnz_row,
+                       empty_shape, dtype):
+    """Shared generated-loops harness for the sparse ops: the §4.2 team
+    loop over ELL row blocks, with the *reference contraction* applied
+    per tile (one implementation of the math, blocked here).  Falls back
+    to plain CSR reference semantics when no static ELL width exists
+    (the layout conversion would not be jit-safe)."""
+    from repro.kernels.spmv import CsrMatrix, EllMatrix, as_ell
+    if isinstance(a, CsrMatrix) and max_nnz_row is None:
+        return reference(a, dense)
+    ell = as_ell(a, max_nnz_row=max_nnz_row)
+    rb = max(int((tiling or {}).get("row_block", 256)), 1)
+    n_rows = ell.values.shape[0]
+    if n_rows == 0:
+        return jnp.zeros(empty_shape, dtype)
+    blocks = []
+    for i0 in range(0, n_rows, rb):          # team loop over row blocks
+        tile = EllMatrix(ell.values[i0:i0 + rb], ell.indices[i0:i0 + rb],
+                         ell.valid[i0:i0 + rb], min(rb, n_rows - i0),
+                         ell.n_cols, ell.nnz_mean)
+        blocks.append(reference(tile, dense))
+    return blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, 0)
+
+
+def spmv_loops(a, x, *, tiling=None, max_nnz_row=None):
+    """Generated-loops SpMV (the paper's TeamPolicy row loop)."""
+    from repro.kernels.spmv import spmv_reference
+    return _sparse_row_blocks(a, x, spmv_reference, tiling, max_nnz_row,
+                              (0,), x.dtype)
+
+
+def spmm_loops(a, b, *, tiling=None, max_nnz_row=None):
+    """Generated-loops SpMM (row-block loop, reference tile contraction)."""
+    from repro.kernels.spmv import spmm_reference
+    return _sparse_row_blocks(a, b, spmm_reference, tiling, max_nnz_row,
+                              (0, int(b.shape[1])), b.dtype)
+
+
 register_backend(Backend(
     name="loops",
     description="pure-jnp loop-nest interpreter (the paper's "
                 "generated-Kokkos-loops path; reference/baseline)",
-    capabilities=frozenset({"loop-nests", "reference"}),
+    capabilities=frozenset({"loop-nests", "reference", "sparse",
+                            "ell-layout"}),
     pipeline=LOWERED_PIPELINE,
     fallbacks=("xla",),
     op_executor=_loops_executor,
@@ -124,3 +163,5 @@ register_backend(Backend(
 register_kernel("kk.gemm", "loops", gemm_loops)
 register_kernel("kk.gemv", "loops", gemv_loops)
 register_kernel("kk.batched_gemm", "loops", batched_gemm_loops)
+register_kernel("kk.spmv", "loops", spmv_loops)
+register_kernel("kk.spmm", "loops", spmm_loops)

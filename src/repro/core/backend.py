@@ -8,8 +8,10 @@ architecture / lowering strategy:
 * a **name** (``"xla"``, ``"pallas"``, ``"loops"``, …) used as the value of
   ``CompileOptions.target``;
 * **capability flags** (``"library"``, ``"custom-kernels"``,
-  ``"loop-nests"``, …) that passes query instead of comparing target
-  strings;
+  ``"loop-nests"``, ``"sparse"``, ``"ell-layout"``, …) that passes query
+  instead of comparing target strings — e.g. the ``sparsify`` pass lowers
+  sparse-encoded linalg ops only for backends declaring ``sparse``, and
+  inserts the CSR→ELL ``sparse.convert`` only for ``ell-layout`` backends;
 * a **pipeline spec** — the ordered pass names ``PassManager`` runs for this
   backend (the per-target lowering composition of the paper's Table 4.2);
 * **per-op kernel registrations** in a central ``opname → {backend: fn}``
@@ -37,9 +39,9 @@ from typing import Callable, Optional
 # library's own fusion wins; LOWERED_PIPELINE adds the
 # dense-linalg-to-parallel-loops lowering for backends that execute explicit
 # loop nests (paper: OpenMP vs CUDA lowerings differ per target too).
-TENSOR_PIPELINE = ("fuse_elementwise", "linalg_to_library",
+TENSOR_PIPELINE = ("fuse_elementwise", "sparsify", "linalg_to_library",
                    "tile_mapping", "dualview_management")
-LOWERED_PIPELINE = ("fuse_elementwise", "linalg_to_library",
+LOWERED_PIPELINE = ("fuse_elementwise", "sparsify", "linalg_to_library",
                     "linalg_to_loops", "tile_mapping",
                     "dualview_management")
 

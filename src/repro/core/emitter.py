@@ -68,6 +68,15 @@ def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
         ex = backend.op_executor(op, options)
         if ex is not None:
             return ex
+    if op.opname == "sparse.pack":
+        # assemble the composite sparse value the encoding describes
+        from repro.kernels.spmv import CsrMatrix
+        n_rows, n_cols = op.results[0].type.shape
+        return lambda ip, ind, val: CsrMatrix(ip, ind, val, n_rows, n_cols)
+    if op.opname == "sparse.convert":
+        from repro.kernels.spmv import as_ell
+        mx = op.attrs.get("max_nnz_row")
+        return lambda a, _mx=mx: as_ell(a, max_nnz_row=_mx)
     if op.opname == "kk.fused_elementwise":
         return op.attrs["fn"]  # XLA fuses the composed closure
     if op.opname.startswith("kk."):
@@ -85,8 +94,8 @@ def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
 def _op_kwargs(op: Op) -> dict:
     """Forward data-independent attrs that implementations accept."""
     out = {}
-    if op.opname == "kk.spmv":
-        out["n_rows"] = op.attrs["n_rows"]
+    if op.opname in ("kk.spmv", "kk.spmm"):
+        out["max_nnz_row"] = op.attrs.get("max_nnz_row")
     if op.opname == "kk.conv2d":
         out["stride"] = tuple(op.attrs["stride"])
         out["padding"] = op.attrs["padding"]
@@ -252,9 +261,17 @@ def _src_line(op: Op, names: dict) -> str:
                 f"constant_values={at.get('value', 0.0)!r})")
     if op.opname == "tensor.gather":
         return f"{res} = jnp.take({a[0]}, {a[1]}, axis={at.get('axis', 0)!r})"
+    if op.opname == "sparse.pack":
+        n_rows, n_cols = op.results[0].type.shape
+        return (f"{res} = _sparse_pack({a[0]}, {a[1]}, {a[2]}, "
+                f"{n_rows}, {n_cols})")
+    if op.opname == "sparse.convert":
+        return (f"{res} = _sparse_convert({a[0]}, "
+                f"{at.get('max_nnz_row')!r})")
     if op.opname in ("linalg.spmv_csr", "kk.spmv"):
-        return (f"{res} = _spmv_csr({a[0]}, {a[1]}, {a[2]}, {a[3]}, "
-                f"n_rows={at['n_rows']!r})")
+        return f"{res} = _spmv({a[0]}, {a[1]})"
+    if op.opname in ("linalg.spmm_csr", "kk.spmm"):
+        return f"{res} = _spmm({a[0]}, {a[1]})"
     if op.opname == "kk.conv2d":
         return (f"{res} = jax.lax.conv_general_dilated({a[0]}, {a[1]}, "
                 f"window_strides={tuple(at['stride'])!r}, "
@@ -289,10 +306,56 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _spmv_csr(indptr, indices, values, x, *, n_rows):
+def _sparse_pack(indptr, indices, values, n_rows, n_cols):
+    """Composite CSR value (tagged tuple — freestanding analogue of the
+    compiler's CsrMatrix)."""
+    return ("csr", indptr, indices, values, n_rows, n_cols)
+
+
+def _sparse_convert(a, max_nnz_row):
+    """CSR -> padded-ELL layout change (sparse.convert)."""
+    _, ip, ind, val, n_rows, n_cols = a
+    width = max(-(-max(max_nnz_row, 1) // 8) * 8, 8)
+    if n_rows == 0 or val.shape[0] == 0:
+        # degenerate matrix: all-padding ELL (gathering val[idx] from a
+        # zero-length values array would be out of bounds)
+        return ("ell", jnp.zeros((n_rows, width), val.dtype),
+                jnp.zeros((n_rows, width), jnp.int32),
+                jnp.zeros((n_rows, width), bool), n_rows, n_cols)
+    offs = jnp.arange(width)[None, :]
+    row_len = ip[1:] - ip[:-1]
+    idx = jnp.clip(ip[:-1, None] + offs, 0, val.shape[0] - 1)
+    valid = offs < row_len[:, None]
+    vals = jnp.where(valid, val[idx], 0).astype(val.dtype)
+    cols = jnp.where(valid, ind[idx], 0).astype(jnp.int32)
+    return ("ell", vals, cols, valid, n_rows, n_cols)
+
+
+def _spmv(a, x):
+    if a[0] == "ell":
+        _, vals, cols, valid, n_rows, _ = a
+        return jnp.sum(vals * jnp.where(valid, x[cols], 0.0),
+                       axis=1).astype(x.dtype)
+    _, ip, ind, val, n_rows, _ = a
+    if val.shape[0] == 0:
+        return jnp.zeros((n_rows,), x.dtype)
     row_ids = jnp.cumsum(
-        jnp.zeros(values.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
-    return jax.ops.segment_sum(values * x[indices], row_ids,
+        jnp.zeros(val.shape[0], jnp.int32).at[ip[1:-1]].add(1))
+    return jax.ops.segment_sum(val * x[ind], row_ids,
+                               num_segments=n_rows)
+
+
+def _spmm(a, b):
+    if a[0] == "ell":
+        _, vals, cols, valid, n_rows, _ = a
+        b_g = jnp.where(valid[:, :, None], b[cols], 0.0)
+        return jnp.sum(vals[:, :, None] * b_g, axis=1).astype(b.dtype)
+    _, ip, ind, val, n_rows, _ = a
+    if val.shape[0] == 0:
+        return jnp.zeros((n_rows, b.shape[1]), b.dtype)
+    row_ids = jnp.cumsum(
+        jnp.zeros(val.shape[0], jnp.int32).at[ip[1:-1]].add(1))
+    return jax.ops.segment_sum(val[:, None] * b[ind], row_ids,
                                num_segments=n_rows)
 
 

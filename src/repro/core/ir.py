@@ -2,10 +2,11 @@
 
 The IR is deliberately MLIR-shaped: a ``Graph`` (≈ func.func) holds ``Op``s in
 SSA form over ``Value``s typed by ``TensorType``.  Ops are namespaced into
-dialects (``linalg.*`` high-level tensor ops, ``kk.*`` Kokkos-Kernels-style
-library calls, ``loops.*`` mid-level parallel loop nests, ``tpu.*`` the
-TPU-adapted Kokkos dialect).  Passes rewrite ops in place; the emitter walks
-the final graph and produces an executable JAX callable and/or Python source.
+dialects (``linalg.*`` high-level tensor ops, ``sparse.*`` sparse-tensor
+storage ops, ``kk.*`` Kokkos-Kernels-style library calls, ``loops.*``
+mid-level parallel loop nests, ``tpu.*`` the TPU-adapted Kokkos dialect).
+Passes rewrite ops in place; the emitter walks the final graph and produces
+an executable JAX callable and/or Python source.
 """
 from __future__ import annotations
 
@@ -36,12 +37,46 @@ class MemorySpace(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
+class SparseEncoding:
+    """Structured sparse-tensor encoding (the MLIR ``#sparse_tensor``
+    attribute analogue; stats are the paper's Table 6.1 per-matrix
+    metadata).
+
+    A ``TensorType`` carrying one denotes the whole sparse matrix as a
+    single composite SSA value — ``sparse.pack`` assembles it from the
+    loose indptr/indices/values tensors, ``sparse.convert`` changes its
+    storage ``format`` (e.g. CSR→ELL for the TPU lane-parallel kernel).
+    """
+
+    format: str = "csr"                  # csr | ell | coo
+    pos_width: int = 32                  # indptr (positions) integer width
+    crd_width: int = 32                  # indices (coordinates) width
+    nnz: Optional[int] = None            # total stored entries
+    nnz_mean: Optional[float] = None     # avg entries/row (§4.2 heuristic)
+    max_nnz_row: Optional[int] = None    # longest row (static ELL width)
+
+    def __str__(self) -> str:
+        s = (f"#sparse<{self.format}, pos=i{self.pos_width}, "
+             f"crd=i{self.crd_width}")
+        if self.nnz is not None:
+            s += f", nnz={self.nnz}"
+        if self.nnz_mean is not None:
+            s += f", nnz/row={self.nnz_mean:.2f}"
+        if self.max_nnz_row is not None:
+            s += f", max/row={self.max_nnz_row}"
+        return s + ">"
+
+    def with_format(self, format: str) -> "SparseEncoding":
+        return dataclasses.replace(self, format=format)
+
+
+@dataclasses.dataclass(frozen=True)
 class TensorType:
     shape: tuple
     dtype: str
     memory_space: MemorySpace = MemorySpace.ANY
-    # Optional sparse encoding, e.g. "csr_values"/"csr_indptr"/"csr_indices".
-    encoding: Optional[str] = None
+    # Sparse tensors carry a structured encoding; dense tensors None.
+    encoding: Optional[SparseEncoding] = None
 
     def __str__(self) -> str:
         dims = "x".join(str(d) for d in self.shape) if self.shape else "scalar"
@@ -53,10 +88,27 @@ class TensorType:
         return s + ">"
 
     @property
+    def is_sparse(self) -> bool:
+        return self.encoding is not None
+
+    @property
     def nbytes(self) -> int:
-        return int(np.prod(self.shape, initial=1)) * np.dtype(
-            _np_dtype(self.dtype)
-        ).itemsize
+        """Stored bytes.  Sparse types count their actual storage, not
+        the dense bound: CSR is values + coordinates + positions; padded
+        ELL is the rectangular values/indices/valid planes (no pos
+        array), whose width is the 8-padded max_nnz_row."""
+        itemsize = dtype_itemsize(self.dtype)
+        enc = self.encoding
+        if enc is not None and enc.format == "ell" and \
+                enc.max_nnz_row is not None:
+            width = max(-(-max(enc.max_nnz_row, 1) // 8) * 8, 8)
+            rows = self.shape[0] if self.shape else 1
+            return rows * width * (itemsize + enc.crd_width // 8 + 1)
+        if enc is not None and enc.nnz is not None:
+            pos = (self.shape[0] + 1 if self.shape else 1) * \
+                (enc.pos_width // 8)
+            return enc.nnz * (itemsize + enc.crd_width // 8) + pos
+        return int(np.prod(self.shape, initial=1)) * itemsize
 
     def with_space(self, space: MemorySpace) -> "TensorType":
         return dataclasses.replace(self, memory_space=space)
@@ -64,6 +116,15 @@ class TensorType:
 
 def _np_dtype(dtype: str):
     return {"bf16": np.float32, "f32": np.float32}.get(dtype, dtype)
+
+
+def dtype_itemsize(dtype: str) -> int:
+    """Bytes per element, correct for dtypes numpy lacks (bf16 is 2 bytes;
+    ``_np_dtype`` maps it to float32 only for *computation* compat, which
+    must not inflate VMEM footprint heuristics 2×)."""
+    if dtype in ("bf16", "bfloat16", "float16", "f16"):
+        return 2
+    return np.dtype(_np_dtype(dtype)).itemsize
 
 
 _value_counter = [0]
@@ -253,11 +314,12 @@ LINALG_ELEMENTWISE = {
 }
 LINALG_REDUCTION = {"linalg.reduce_sum", "linalg.reduce_max", "linalg.mean",
                     "linalg.softmax"}
-LINALG_SPARSE = {"linalg.spmv_csr"}
+LINALG_SPARSE = {"linalg.spmv_csr", "linalg.spmm_csr"}
+SPARSE_OPS = {"sparse.pack", "sparse.convert"}
 LINALG_SHAPE = {"tensor.reshape", "tensor.transpose", "tensor.slice",
                 "tensor.concat", "tensor.broadcast", "tensor.cast",
                 "tensor.constant", "tensor.pad", "tensor.gather"}
-KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv",
+KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv", "kk.spmm",
           "kk.attention", "kk.rwkv6_scan", "kk.rglru_scan", "kk.conv2d",
           "kk.fused_elementwise"}
 LOOPS_OPS = {"loops.parallel", "loops.sequential_scan"}

@@ -224,25 +224,122 @@ def dot(a, b):
     return ref(a, b)
 
 
+# ---------------------------------------------------------------------------
+# sparse linear algebra (linalg.*_csr — lowered by the `sparsify` pass)
+#
+# Sparse ops never bypass the pipeline: tracing emits a composite
+# sparse-encoded value (sparse.pack) feeding a linalg.* op, and the eager
+# mode compiles exactly that graph through trace → PassManager → backend
+# dispatch (cached per shape/stats/backend) — the paper's
+# `--sparse-compiler-kokkos` stage, not a kernel-table shortcut.
+# ---------------------------------------------------------------------------
+
+_SPARSE_PIPELINE_CACHE: dict = {}
+
+
+def _csr_stats(indptr, values, n_rows: int, nnz_mean, max_nnz_row):
+    """Fill per-matrix stats (paper Table 6.1) from concrete CSR arrays.
+    Under an outer jit the arrays are tracers — stats the caller did not
+    supply stay None and the lowering keeps the layout jit-safe (CSR)."""
+    nnz = int(values.shape[0])
+    if nnz_mean is None:
+        nnz_mean = nnz / max(n_rows, 1)
+    if max_nnz_row is None and not isinstance(indptr, jax.core.Tracer):
+        ip = np.asarray(indptr)
+        max_nnz_row = int(np.max(np.diff(ip))) if n_rows else 0
+    return nnz, float(nnz_mean), max_nnz_row
+
+
+def _emit_sparse(opname: str, csr, dense, *, n_rows: int, n_cols: int,
+                 out_shape: tuple, nnz_mean, max_nnz_row):
+    from repro.core.ir import SparseEncoding
+    indptr, indices, values = [as_traced(c) for c in csr]
+    dense = as_traced(dense)
+    nnz = int(values.shape[0])
+    enc = SparseEncoding(
+        format="csr", nnz=nnz,
+        nnz_mean=float(nnz_mean) if nnz_mean is not None
+        else nnz / max(n_rows, 1),
+        max_nnz_row=max_nnz_row)
+    a_type = TensorType((n_rows, n_cols), values.value.type.dtype,
+                        encoding=enc)
+    a = tracer.emit_op("sparse.pack", [indptr, indices, values], [a_type],
+                       attrs={"format": "csr"})
+    out_dtype = jnp.promote_types(values.dtype, dense.dtype).name
+    return tracer.emit_op(
+        opname, [a, dense], [TensorType(out_shape, out_dtype)],
+        attrs={"n_rows": n_rows, "nnz_mean": enc.nnz_mean,
+               "max_nnz_row": max_nnz_row})
+
+
+def _sparse_via_pipeline(opname: str, arrays: tuple, kwargs: dict):
+    """Eager sparse execution = compile the one-op graph through the full
+    pipeline for the ambient backend (memoized on shapes/stats/options)."""
+    import dataclasses
+
+    from repro.core.options import current_options
+    options = current_options()
+    specs = tuple(jax.ShapeDtypeStruct(a.shape, jnp.dtype(a.dtype))
+                  for a in arrays)
+    # every options field affects compilation (tiling heuristics read
+    # lane_width/vmem_limit_bytes, the PassManager reads verify_ir/…), so
+    # key on the whole record plus the host-resolved interpret flag
+    key = (opname,
+           tuple((s.shape, s.dtype.name) for s in specs),
+           tuple(sorted(kwargs.items())),
+           dataclasses.astuple(options), options.resolve_interpret())
+    mod = _SPARSE_PIPELINE_CACHE.get(key)
+    if mod is None:
+        from repro.core import pipeline as pipeline_mod
+        builder = spmv_csr if opname == "linalg.spmv_csr" else spmm_csr
+
+        def sparse_fn(*args):
+            return builder(*args, **kwargs)
+
+        mod = pipeline_mod.compile(sparse_fn, *specs, options=options,
+                                   name=opname.replace(".", "_"))
+        _SPARSE_PIPELINE_CACHE[key] = mod
+    return mod(*arrays)
+
+
 def spmv_csr(indptr, indices, values, x, *, n_rows: int,
-             nnz_mean: Optional[float] = None):
+             nnz_mean: Optional[float] = None,
+             max_nnz_row: Optional[int] = None):
     """CSR sparse matrix-vector product y = A @ x.
 
-    ``nnz_mean`` feeds the paper's vector-length heuristic (§4.2): the
-    average entries-per-row estimate that sizes the inner parallel loop.
+    ``nnz_mean`` feeds the paper's vector-length heuristic (§4.2) and
+    ``max_nnz_row`` the static ELL width (Table 6.1); both are derived
+    from the data when concrete arrays arrive eagerly.
     """
-    def ref(ip, ind, val, xv):
-        # gather/segment-sum reference (pure jnp)
-        row_ids = jnp.cumsum(
-            jnp.zeros(val.shape[0], jnp.int32).at[ip[1:-1]].add(1))
-        contrib = val * xv[ind]
-        return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
-
     if tracing():
-        return emit("linalg.spmv_csr", [indptr, indices, values, x], ref,
-                    attrs={"n_rows": n_rows, "nnz_mean": nnz_mean})
-    return _registry_call("kk.spmv", indptr, indices, values, x,
-                          n_rows=n_rows)
+        return _emit_sparse("linalg.spmv_csr", (indptr, indices, values), x,
+                            n_rows=n_rows, n_cols=int(x.shape[0]),
+                            out_shape=(n_rows,), nnz_mean=nnz_mean,
+                            max_nnz_row=max_nnz_row)
+    _, nnz_mean, max_nnz_row = _csr_stats(indptr, values, n_rows,
+                                          nnz_mean, max_nnz_row)
+    return _sparse_via_pipeline(
+        "linalg.spmv_csr", (indptr, indices, values, x),
+        {"n_rows": n_rows, "nnz_mean": nnz_mean,
+         "max_nnz_row": max_nnz_row})
+
+
+def spmm_csr(indptr, indices, values, b, *, n_rows: int,
+             nnz_mean: Optional[float] = None,
+             max_nnz_row: Optional[int] = None):
+    """CSR sparse matrix × dense matrix product Y = A @ B
+    (B: (n_cols, n))."""
+    if tracing():
+        return _emit_sparse("linalg.spmm_csr", (indptr, indices, values), b,
+                            n_rows=n_rows, n_cols=int(b.shape[0]),
+                            out_shape=(n_rows, int(b.shape[1])),
+                            nnz_mean=nnz_mean, max_nnz_row=max_nnz_row)
+    _, nnz_mean, max_nnz_row = _csr_stats(indptr, values, n_rows,
+                                          nnz_mean, max_nnz_row)
+    return _sparse_via_pipeline(
+        "linalg.spmm_csr", (indptr, indices, values, b),
+        {"n_rows": n_rows, "nnz_mean": nnz_mean,
+         "max_nnz_row": max_nnz_row})
 
 
 def conv2d(x, w, *, stride=(1, 1), padding="SAME"):

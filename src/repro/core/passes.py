@@ -3,21 +3,28 @@
 Pass order (mirrors the paper's pipeline):
 
 1. ``fuse_elementwise``        [beyond paper] chain-fuse elementwise ops.
-2. ``linalg_to_library``       [linalg-to-kokkoskernels] matmul/gemv/spmv →
+2. ``sparsify``                [sparse-compiler-kokkos] pick the storage
+                               layout for sparse-encoded operands (CSR→ELL
+                               ``sparse.convert`` when the backend wants the
+                               lane-parallel layout and the stats allow) and
+                               lower ``linalg.spmv_csr``/``linalg.spmm_csr``
+                               to ``kk.spmv``/``kk.spmm`` with §4.2 tiling.
+3. ``linalg_to_library``       [linalg-to-kokkoskernels] matmul/gemv →
                                ``kk.*`` library-call ops.
-3. ``linalg_to_loops``         [dense-linalg-to-parallel-loops] remaining
+4. ``linalg_to_loops``         [dense-linalg-to-parallel-loops] remaining
                                dense ops → ``loops.parallel`` nests.
-4. ``tile_mapping``            [kokkos-loop-mapping] map loop nests onto the
+5. ``tile_mapping``            [kokkos-loop-mapping] map loop nests onto the
                                TPU hierarchy (grid / VMEM block / 128-lane
                                vector) and compute *heuristic* block shapes —
                                the team-size / vector-length analogue.
-5. ``dualview_management``     [kokkos-dualview-management] assign memory
+6. ``dualview_management``     [kokkos-dualview-management] assign memory
                                spaces and insert lazy ``tpu.sync`` /
                                ``tpu.modify`` ops.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import math
 from typing import Optional
 
@@ -25,7 +32,8 @@ import numpy as np
 
 from repro.core import refs
 from repro.core.ir import (Graph, LINALG_ELEMENTWISE, LINALG_MATMUL_LIKE,
-                           LINALG_REDUCTION, MemorySpace, Op, TensorType)
+                           LINALG_REDUCTION, LINALG_SPARSE, MemorySpace, Op,
+                           TensorType, dtype_itemsize)
 from repro.core.options import CompileOptions, current_options
 from repro.core.passmgr import PassManager, register_pass
 
@@ -132,14 +140,77 @@ def _fuse_pair(graph: Graph, producer: Op, consumer: Op,
 
 
 # ---------------------------------------------------------------------------
-# 2. linalg-to-kokkoskernels
+# 2. sparsify (the `--sparse-compiler-kokkos` stage)
+# ---------------------------------------------------------------------------
+
+_SPARSE_TO_KK = {
+    "linalg.spmv_csr": "kk.spmv",
+    "linalg.spmm_csr": "kk.spmm",
+}
+
+
+@register_pass()
+def sparsify(graph: Graph,
+             options: Optional[CompileOptions] = None) -> int:
+    """Lower linalg ops with sparse-encoded operands (paper §5: the
+    sparsifier as an ordinary composable pass, not a bolt-on).
+
+    Per op: (i) fold the §4.2 vector-length heuristic
+    (:func:`choose_spmv_tiling`) into ``attrs["tiling"]``; (ii) when the
+    backend declares the ``ell-layout`` capability *and* the encoding
+    carries the static ``max_nnz_row`` bound (Table 6.1 — required for a
+    jit-safe fixed ELL width), materialize the layout change as an
+    IR-visible ``sparse.convert`` op; (iii) rewrite the linalg op to its
+    ``kk.*`` library-call form.  Backends without the ``sparse``
+    capability keep the linalg op (the emitter's reference fallback runs
+    it), so new plugins opt in by declaring a flag — never by editing
+    this pass."""
+    options = options or current_options()
+    backend = options.backend()
+    if not backend.has_capability("sparse"):
+        return 0
+    rewritten = 0
+    for op in list(graph.ops):
+        kk = _SPARSE_TO_KK.get(op.opname)
+        if kk is None:
+            continue
+        a, dense = op.operands
+        enc = a.type.encoding
+        if enc is None or enc.format != "csr":
+            continue
+        n_rows = a.type.shape[0]
+        nnz_mean = (op.attrs.get("nnz_mean") or enc.nnz_mean or
+                    (enc.nnz / max(n_rows, 1) if enc.nnz else 1.0))
+        tiling = choose_spmv_tiling(n_rows, nnz_mean, options)
+        new_ops = []
+        if backend.has_capability("ell-layout") and \
+                enc.max_nnz_row is not None:
+            ell_type = dataclasses.replace(
+                a.type, encoding=enc.with_format("ell"))
+            conv = Op("sparse.convert", [a], [ell_type],
+                      attrs={"from": "csr", "to": "ell",
+                             "max_nnz_row": enc.max_nnz_row,
+                             "tiling": tiling})
+            new_ops.append(conv)
+            a = conv.results[0]
+        new = Op(kk, [a, dense], [r.type for r in op.results],
+                 attrs={**op.attrs, "tiling": tiling,
+                        "level_map": ("grid(row-block)", "row",
+                                      "lane(ell)")})
+        new_ops.append(new)
+        graph.replace_op(op, new_ops, dict(zip(op.results, new.results)))
+        rewritten += 1
+    return rewritten
+
+
+# ---------------------------------------------------------------------------
+# 3. linalg-to-kokkoskernels
 # ---------------------------------------------------------------------------
 
 _TO_KK = {
     "linalg.matmul": "kk.gemm",
     "linalg.batch_matmul": "kk.batched_gemm",
     "linalg.gemv": "kk.gemv",
-    "linalg.spmv_csr": "kk.spmv",
 }
 
 
@@ -165,7 +236,7 @@ def linalg_to_library(graph: Graph,
 
 
 # ---------------------------------------------------------------------------
-# 3. dense-linalg-to-parallel-loops
+# 4. dense-linalg-to-parallel-loops
 # ---------------------------------------------------------------------------
 
 _LOOPABLE = LINALG_ELEMENTWISE | LINALG_REDUCTION | {"kk.fused_elementwise"}
@@ -218,7 +289,7 @@ def linalg_to_loops(graph: Graph,
 
 
 # ---------------------------------------------------------------------------
-# 4. kokkos-loop-mapping → TPU tile mapping
+# 5. kokkos-loop-mapping → TPU tile mapping
 # ---------------------------------------------------------------------------
 
 def _round_up(x: int, m: int) -> int:
@@ -317,8 +388,7 @@ def tile_mapping(graph: Graph,
             a, b = op.operands
             m, k = a.type.shape
             n = b.type.shape[1]
-            itemsize = np.dtype(np.float32).itemsize if "32" in a.type.dtype \
-                else 2
+            itemsize = dtype_itemsize(a.type.dtype)
             op.attrs["tiling"] = choose_matmul_blocks(m, n, k, itemsize,
                                                       options)
             op.attrs["level_map"] = ("grid", "block", "lane")
@@ -327,7 +397,7 @@ def tile_mapping(graph: Graph,
             a, b = op.operands
             *batch, m, k = a.type.shape
             n = b.type.shape[-1]
-            itemsize = 4 if "32" in a.type.dtype else 2
+            itemsize = dtype_itemsize(a.type.dtype)
             t = choose_matmul_blocks(m, n, k, itemsize, options)
             # paper §6: for small matrices vectorize the *batch* dimension
             small = m * n <= options.mxu_dim ** 2 // 4
@@ -338,18 +408,11 @@ def tile_mapping(graph: Graph,
             op.attrs["tiling"] = t
             op.attrs["level_map"] = ("grid(batch)", "block", "lane")
             mapped += 1
-        elif op.opname == "kk.spmv":
-            nnz_mean = op.attrs.get("nnz_mean")
-            n_rows = op.attrs["n_rows"]
-            if nnz_mean is None:
-                nnz = op.operands[2].type.shape[0]
-                nnz_mean = nnz / max(n_rows, 1)
-            op.attrs["tiling"] = choose_spmv_tiling(n_rows, nnz_mean, options)
-            op.attrs["level_map"] = ("grid(row-block)", "row", "lane(ell)")
-            mapped += 1
+        # kk.spmv / kk.spmm carry tiling from the sparsify pass (their
+        # only producer) — no mapping needed here
         elif op.opname == "loops.parallel":
             shape = op.attrs["iter_space"]
-            itemsize = 4 if "32" in op.results[0].type.dtype else 2
+            itemsize = dtype_itemsize(op.results[0].type.dtype)
             tiling = choose_map_blocks(shape, itemsize,
                                        len(op.operands) + 1, options)
             depth = len(shape)
@@ -365,7 +428,7 @@ def tile_mapping(graph: Graph,
 
 
 # ---------------------------------------------------------------------------
-# 5. kokkos-dualview-management
+# 6. kokkos-dualview-management
 # ---------------------------------------------------------------------------
 
 _DEVICE_COMPUTE = {"kk", "tpu", "loops", "linalg", "tensor"}

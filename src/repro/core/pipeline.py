@@ -97,14 +97,50 @@ def _demo_mlp():
         h = ops.relu(ops.matmul(x, ops.constant(w1)))
         return ops.softmax(ops.matmul(h, ops.constant(w2)))
 
+    import numpy as _np
     x = jax.ShapeDtypeStruct((8, 64), "float32")
-    return mlp, (x,)
+    ex = _np.random.default_rng(1).standard_normal((8, 64)) \
+        .astype("float32")
+    return mlp, (x,), (ex,)
+
+
+def _demo_spmv():
+    """The paper's headline sparse demo: y = relu(A @ x) with A a CSR
+    matrix carried as one sparse-encoded composite value and lowered by
+    the `sparsify` pass (`lapis-opt --sparse-compiler-kokkos`)."""
+    import numpy as np
+
+    from repro.core import ops
+    rng = np.random.default_rng(0)
+    n, nnz_mean = 512, 12
+    lens = np.maximum(rng.poisson(nnz_mean, n), 1).astype(np.int32)
+    indptr = np.zeros(n + 1, np.int32)
+    np.cumsum(lens, out=indptr[1:])
+    nnz = int(indptr[-1])
+    max_nnz_row = int(lens.max())
+
+    def spmv(ip, ind, val, x):
+        return ops.relu(ops.spmv_csr(ip, ind, val, x, n_rows=n,
+                                     max_nnz_row=max_nnz_row))
+
+    specs = (jax.ShapeDtypeStruct((n + 1,), "int32"),
+             jax.ShapeDtypeStruct((nnz,), "int32"),
+             jax.ShapeDtypeStruct((nnz,), "float32"),
+             jax.ShapeDtypeStruct((n,), "float32"))
+    example = (indptr,
+               rng.integers(0, n, nnz).astype(np.int32),
+               rng.standard_normal(nnz).astype(np.float32),
+               rng.standard_normal(n).astype(np.float32))
+    return spmv, specs, example
+
+
+_DEMOS = {"mlp": _demo_mlp, "spmv": _demo_spmv}
 
 
 def main(argv=None) -> int:
     import argparse
     p = argparse.ArgumentParser(description="LAPIS pipeline driver")
-    p.add_argument("--demo", default="mlp", choices=["mlp"])
+    p.add_argument("--demo", default="mlp", choices=sorted(_DEMOS))
     p.add_argument("--target", default="auto",
                    choices=backend_mod.available_backends(),
                    help="execution backend (any registered plugin)")
@@ -125,7 +161,7 @@ def main(argv=None) -> int:
                 print(f"{'':8s}  {b.description}")
         return 0
 
-    fn, specs = _demo_mlp()
+    fn, specs, example = _DEMOS[args.demo]()
     opts = CompileOptions(target=args.target,
                           fuse_elementwise=args.emit is None,
                           print_ir_after_all=args.print_ir_after_all)
@@ -134,10 +170,7 @@ def main(argv=None) -> int:
         print(mod.print_ir())
     if args.emit:
         print("wrote", mod.save_source(args.emit))
-    import numpy as np
-    x = np.random.default_rng(1).standard_normal(
-        specs[0].shape).astype("float32")
-    y = mod(x)
+    y = mod(*example)
     print("output shape:", y.shape, "sum:", float(y.sum()))
     return 0
 

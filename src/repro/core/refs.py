@@ -13,12 +13,17 @@ import jax
 import jax.numpy as jnp
 
 
-def _spmv_ref(n_rows):
-    def ref(indptr, indices, values, x):
-        row_ids = jnp.cumsum(
-            jnp.zeros(values.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
-        contrib = values * x[indices]
-        return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
+def _spmv_ref(attrs):
+    def ref(a, x):
+        from repro.kernels.spmv import spmv_reference
+        return spmv_reference(a, x)
+    return ref
+
+
+def _spmm_ref(attrs):
+    def ref(a, b):
+        from repro.kernels.spmv import spmm_reference
+        return spmm_reference(a, b)
     return ref
 
 
@@ -112,7 +117,9 @@ def op_ref(opname: str, attrs: dict) -> Callable:
     if opname == "tensor.gather":
         return lambda a, i: jnp.take(a, i, axis=attrs.get("axis", 0))
     if opname in ("linalg.spmv_csr", "kk.spmv"):
-        return _spmv_ref(attrs["n_rows"])
+        return _spmv_ref(attrs)
+    if opname in ("linalg.spmm_csr", "kk.spmm"):
+        return _spmm_ref(attrs)
     if opname == "kk.conv2d":
         return _conv2d_ref(attrs)
     if opname == "linalg.batch_norm":

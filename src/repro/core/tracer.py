@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ir import Graph, MemorySpace, Op, TensorType, Value
+from repro.core.ir import (Graph, MemorySpace, Op, SparseEncoding,
+                           TensorType, Value)
 
 _tls = threading.local()
 
@@ -25,7 +26,7 @@ def _jax_dtype_name(dtype) -> str:
 
 
 def type_of(x, memory_space: MemorySpace = MemorySpace.ANY,
-            encoding: Optional[str] = None) -> TensorType:
+            encoding: Optional[SparseEncoding] = None) -> TensorType:
     return TensorType(tuple(x.shape), _jax_dtype_name(x.dtype),
                       memory_space, encoding)
 
@@ -154,6 +155,21 @@ def emit(opname: str, inputs: Sequence, ref: Callable,
         Op(opname, [t.value for t in traced], result_types, attrs=attrs))
     results = [TracedValue(r) for r in op.results]
     return results[0] if n_results == 1 else tuple(results)
+
+
+def emit_op(opname: str, inputs: Sequence, result_types: Sequence,
+            attrs: Optional[dict] = None):
+    """Record one op with *explicit* result types — for ops whose semantics
+    ``jax.eval_shape`` cannot infer (composite sparse values have no
+    ShapeDtypeStruct form).  Returns one TracedValue or a tuple."""
+    ctx = current_trace()
+    assert ctx is not None, "emit_op() outside of a trace"
+    traced = [as_traced(x) for x in inputs]
+    op = ctx.graph.add(
+        Op(opname, [t.value for t in traced], list(result_types),
+           attrs=attrs))
+    results = [TracedValue(r) for r in op.results]
+    return results[0] if len(results) == 1 else tuple(results)
 
 
 def trace(fn: Callable, *arg_specs, name: Optional[str] = None,

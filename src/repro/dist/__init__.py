@@ -1,0 +1,1 @@
+"""Distributed execution helpers (mesh-aware sharding rules)."""

@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules: spec trees for params/batches/caches and
+in-graph constraints (the GSPMD side of DESIGN.md §6).
+
+Parameters declare *logical* axis names once (``models/spec.py``); this
+module maps them onto whatever mesh is in scope:
+
+* ``embed`` (d_model) is FSDP-sharded over the data axes — ``("pod",
+  "data")`` when a multi-pod mesh provides both, just ``"data"``
+  otherwise;
+* ``ffn``/``qkv``/``kv``/``vocab``/``heads``/``experts`` are
+  tensor/expert-parallel over ``"model"``;
+* ``layers`` (the stacked-scan dim) is never sharded;
+* a dim whose size does not divide the mesh axis product is left
+  **unsharded** (dropped, not padded), and a mesh axis is never reused
+  within one parameter's spec.
+
+Everything degrades to a no-op on a single device: ``constrain`` /
+``constrain_params`` are pass-throughs unless a mesh is active via
+:func:`use_mesh`, so model code can sprinkle constraints unconditionally.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Mesh axes FSDP spans, outermost first (a multi-pod mesh shards the embed
+# dim over pod×data; a single-pod mesh over data alone).
+FSDP_AXES = ("pod", "data")
+
+# logical param axis -> candidate mesh axes (see models/spec.py)
+PARAM_RULES = {
+    "embed": FSDP_AXES,
+    "ffn": ("model",),
+    "qkv": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "heads": ("model",),
+    "layers": (),
+    None: (),
+}
+
+# logical activation axis -> candidate mesh axes (constrain())
+ACT_RULES = {
+    "batch": FSDP_AXES,
+    "seq": (),
+    "ffn": ("model",),
+    "qkv": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    None: (),
+}
+
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+
+def _mesh_axes(mesh, names: Sequence[str]) -> tuple:
+    """The subset of ``names`` actually present on ``mesh`` (order kept)."""
+    present = set(mesh.axis_names)
+    return tuple(n for n in names if n in present)
+
+
+def _axis_size(mesh, axes) -> int:
+    """Product of the mesh sizes of ``axes`` (a name or a tuple of names)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= dict(mesh.shape)[a]
+    return size
+
+
+# ---------------------------------------------------------------------------
+# spec construction
+# ---------------------------------------------------------------------------
+
+def spec_for(mesh, shape: Tuple[int, ...],
+             axes: Sequence[Optional[str]], rules: dict) -> P:
+    """Build a PartitionSpec for one tensor from its logical axes.
+
+    Per dim: look up the rule's candidate mesh axes, keep only axes the
+    mesh has, and shard iff the dim size divides their product and none of
+    them was already used by an earlier dim of this tensor.  Trailing
+    replicated dims are trimmed so fully-replicated tensors compare equal
+    to ``P()``.
+    """
+    used: set = set()
+    parts: list = []
+    for dim, ax in zip(shape, axes):
+        cands = _mesh_axes(mesh, rules.get(ax, ()))
+        if cands and not (set(cands) & used) and \
+                dim % _axis_size(mesh, cands) == 0:
+            parts.append(cands if len(cands) > 1 else cands[0])
+            used.update(cands)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(mesh, abstract_tree, axes_tree) -> Any:
+    """ShapeDtypeStruct tree + logical-axes tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda a, ax: NamedSharding(
+            mesh, spec_for(mesh, tuple(a.shape), tuple(ax), PARAM_RULES)),
+        abstract_tree, axes_tree)
+
+
+def batch_sharding(mesh, shape: Tuple[int, ...]) -> NamedSharding:
+    """Data-parallel sharding: dim 0 over the FSDP axes when divisible,
+    everything else replicated."""
+    parts: list = [None] * len(shape)
+    fsdp = _mesh_axes(mesh, FSDP_AXES)
+    if shape and fsdp and shape[0] % _axis_size(mesh, fsdp) == 0:
+        parts[0] = fsdp if len(fsdp) > 1 else fsdp[0]
+    return NamedSharding(mesh, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# active mesh + in-graph constraints
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+
+def current_mesh():
+    return getattr(_tls, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for :func:`constrain` within the block."""
+    prev = getattr(_tls, "mesh", None)
+    _tls.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _tls.mesh = prev
+
+
+def constrain(x, *axes):
+    """``with_sharding_constraint`` by logical activation axes; identity
+    when no mesh is active (single-device runs and unit tests)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(mesh, tuple(x.shape), tuple(axes), ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_params(tree, axes_tree):
+    """Constrain a whole param-shaped tree (grads, accumulators) to the
+    param sharding rules; identity when no mesh is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda p, ax: jax.lax.with_sharding_constraint(
+            p, NamedSharding(
+                mesh, spec_for(mesh, tuple(p.shape), tuple(ax),
+                               PARAM_RULES))),
+        tree, axes_tree)

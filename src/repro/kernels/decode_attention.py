@@ -19,7 +19,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import pallas_compat
 
 NEG_INF = -1e30
 
@@ -103,7 +105,7 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         scratch_shapes=[pltpu.VMEM((rep, 1), jnp.float32),
                         pltpu.VMEM((rep, 1), jnp.float32),
                         pltpu.VMEM((rep, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(len_r, qr, kr, vr)

@@ -16,7 +16,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import pallas_compat
 
 NEG_INF = -1e30
 
@@ -131,7 +133,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, kp, vp)

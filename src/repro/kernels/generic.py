@@ -13,7 +13,9 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import pallas_compat
 
 
 def _ceil(a: int, b: int) -> int:
@@ -49,7 +51,7 @@ def block_map(fn: Callable, args: Sequence[jax.Array], out_shape: tuple,
         in_specs=[pl.BlockSpec(block, idx_map) for _ in padded_args],
         out_specs=pl.BlockSpec(block, idx_map),
         out_shape=jax.ShapeDtypeStruct(padded, out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel",) * len(grid)),
         interpret=interpret,
     )(*padded_args)

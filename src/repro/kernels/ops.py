@@ -19,7 +19,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.options import CompileOptions, current_options
 from repro.core.registry import register
@@ -123,23 +122,42 @@ def batched_gemm_pallas(a, b, *, tiling=None, interpret=False):
 
 
 # ---------------------------------------------------------------------------
-# kk.spmv
+# kk.spmv / kk.spmm — operands arrive as the composite sparse value a
+# sparse.pack / sparse.convert op produced (CsrMatrix or EllMatrix)
 # ---------------------------------------------------------------------------
 
 @register("kk.spmv", "xla")
-def spmv_xla(indptr, indices, values, x, *, n_rows, tiling=None,
-             max_nnz_row=None):
-    return ref.spmv_csr(indptr, indices, values, x, n_rows=n_rows)
+def spmv_xla(a, x, *, tiling=None, max_nnz_row=None):
+    return _sp.spmv_reference(a, x)
 
 
 @register("kk.spmv", "pallas")
-def spmv_pallas(indptr, indices, values, x, *, n_rows, tiling=None,
-                max_nnz_row=None, interpret=False):
+def spmv_pallas(a, x, *, tiling=None, max_nnz_row=None, interpret=False):
+    if isinstance(a, _sp.CsrMatrix) and max_nnz_row is None:
+        # no static ELL width (matrix stats unknown at compile time):
+        # the layout conversion is not jit-safe — run library semantics
+        return _sp.spmv_reference(a, x)
     t = tiling or {}
-    return _sp.spmv_csr(indptr, indices, values, x, n_rows=n_rows,
-                        row_block=t.get("row_block", 256),
+    ell = _sp.as_ell(a, max_nnz_row=max_nnz_row)
+    return _sp.spmv_ell(ell, x, row_block=t.get("row_block", 256),
                         row_width=t.get("row_width", 128),
-                        max_nnz_row=max_nnz_row, interpret=interpret)
+                        interpret=interpret)
+
+
+@register("kk.spmm", "xla")
+def spmm_xla(a, b, *, tiling=None, max_nnz_row=None):
+    return _sp.spmm_reference(a, b)
+
+
+@register("kk.spmm", "pallas")
+def spmm_pallas(a, b, *, tiling=None, max_nnz_row=None, interpret=False):
+    from repro.kernels import spmm as _spmm
+    if isinstance(a, _sp.CsrMatrix) and max_nnz_row is None:
+        return _sp.spmm_reference(a, b)
+    t = tiling or {}
+    return _spmm.spmm_sparse(a, b, row_block=t.get("row_block", 128),
+                             row_width=t.get("row_width", 128),
+                             max_nnz_row=max_nnz_row, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,12 @@
+"""Pallas API compatibility shims.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` upstream;
+kernels import :data:`CompilerParams` from here so they run on both the
+pinned container jax and current releases.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -37,9 +37,22 @@ def gemv(a: jax.Array, x: jax.Array) -> jax.Array:
 def spmv_csr(indptr: jax.Array, indices: jax.Array, values: jax.Array,
              x: jax.Array, *, n_rows: int) -> jax.Array:
     """Segment-sum CSR SpMV (y = A @ x)."""
+    if values.shape[0] == 0:
+        return jnp.zeros((n_rows,), x.dtype)
     row_ids = jnp.cumsum(
         jnp.zeros(values.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
     return jax.ops.segment_sum(values * x[indices], row_ids,
+                               num_segments=n_rows)
+
+
+def spmm_csr(indptr: jax.Array, indices: jax.Array, values: jax.Array,
+             b: jax.Array, *, n_rows: int) -> jax.Array:
+    """Segment-sum CSR SpMM (Y = A @ B, B dense (n_cols, n))."""
+    if values.shape[0] == 0:
+        return jnp.zeros((n_rows, b.shape[1]), b.dtype)
+    row_ids = jnp.cumsum(
+        jnp.zeros(values.shape[0], jnp.int32).at[indptr[1:-1]].add(1))
+    return jax.ops.segment_sum(values[:, None] * b[indices], row_ids,
                                num_segments=n_rows)
 
 

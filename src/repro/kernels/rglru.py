@@ -14,7 +14,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import pallas_compat
 
 RGLRU_C = 8.0
 
@@ -76,7 +78,7 @@ def rglru_scan(x: jax.Array, r_gate: jax.Array, i_gate: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, d_block), lambda b, d, t: (b, t, d)),
         out_shape=jax.ShapeDtypeStruct((B, pt, pd), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, d_block), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, rp, ip, lap)

@@ -25,7 +25,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import pallas_compat
+
+
+class CsrMatrix(NamedTuple):
+    """Runtime composite CSR value (what a sparse-encoded IR value holds
+    between ``sparse.pack`` and the consuming kernel)."""
+    indptr: jax.Array     # (n_rows + 1,)
+    indices: jax.Array    # (nnz,) column ids
+    values: jax.Array     # (nnz,)
+    n_rows: int
+    n_cols: int
 
 
 class EllMatrix(NamedTuple):
@@ -52,9 +64,18 @@ def csr_to_ell(indptr, indices, values, n_rows: int, n_cols: int,
     indptr = jnp.asarray(indptr)
     indices = jnp.asarray(indices)
     values = jnp.asarray(values)
+    if n_rows == 0:
+        # degenerate matrix: indptr is the single sentinel 0, so the row
+        # windows below would index indptr[:-1] into an undefined width —
+        # return a well-formed all-padding ELL instead
+        width = max(_ceil(max(max_nnz_row or 0, 1), pad_to) * pad_to,
+                    pad_to)
+        return EllMatrix(jnp.zeros((0, width), values.dtype),
+                         jnp.zeros((0, width), jnp.int32),
+                         jnp.zeros((0, width), bool), 0, n_cols, 0.0)
     row_len = indptr[1:] - indptr[:-1]
     if max_nnz_row is None:
-        max_nnz_row = int(jnp.max(row_len)) if n_rows else 0
+        max_nnz_row = int(jnp.max(row_len))
     width = max(_ceil(max(max_nnz_row, 1), pad_to) * pad_to, pad_to)
     offs = jnp.arange(width)[None, :]
     idx = indptr[:-1, None] + offs
@@ -85,6 +106,8 @@ def spmv_ell(ell: EllMatrix, x: jax.Array, *, row_block: int = 256,
              row_width: int = 128, interpret: bool = False) -> jax.Array:
     """y = A @ x from the padded ELL layout."""
     n_rows, width = ell.values.shape
+    if n_rows == 0:
+        return jnp.zeros((0,), x.dtype)   # no rows: never launch a 0-grid
     x_g = jnp.where(ell.valid, x[ell.indices], 0.0).astype(jnp.float32)
     rb = min(row_block, max(n_rows, 1))
     rw = min(row_width, width)
@@ -102,11 +125,41 @@ def spmv_ell(ell: EllMatrix, x: jax.Array, *, row_block: int = 256,
                   pl.BlockSpec((rb, rw), lambda i, s: (i, s))],
         out_specs=pl.BlockSpec((rb, 1), lambda i, s: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((pr, 1), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(vals, x_g)
     return out[:n_rows, 0]
+
+
+def as_ell(a, max_nnz_row: int = None) -> EllMatrix:
+    """Composite sparse value → ELL layout (identity if already ELL).
+    ``a`` is a :class:`CsrMatrix` or :class:`EllMatrix` — what the
+    ``sparse.pack`` / ``sparse.convert`` ops produce at runtime."""
+    if isinstance(a, EllMatrix):
+        return a
+    return csr_to_ell(a.indptr, a.indices, a.values, a.n_rows, a.n_cols,
+                      max_nnz_row=max_nnz_row)
+
+
+def spmv_reference(a, x):
+    """Library-semantics SpMV on either layout of the composite value —
+    the single implementation behind the xla kernel-table entry and the
+    emitter's reference fallback (keep them from diverging)."""
+    from repro.kernels import ref
+    if isinstance(a, EllMatrix):
+        x_g = jnp.where(a.valid, x[a.indices], 0.0)
+        return jnp.sum(a.values * x_g, axis=1).astype(x.dtype)
+    return ref.spmv_csr(a.indptr, a.indices, a.values, x, n_rows=a.n_rows)
+
+
+def spmm_reference(a, b):
+    """Library-semantics SpMM on either layout of the composite value."""
+    from repro.kernels import ref
+    if isinstance(a, EllMatrix):
+        b_g = jnp.where(a.valid[:, :, None], b[a.indices], 0.0)
+        return jnp.sum(a.values[:, :, None] * b_g, axis=1).astype(b.dtype)
+    return ref.spmm_csr(a.indptr, a.indices, a.values, b, n_rows=a.n_rows)
 
 
 def spmv_csr(indptr, indices, values, x, *, n_rows: int,

@@ -3,7 +3,9 @@ oracle that keeps a single always-consistent array."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dualview import (DualView, TRANSFERS, reset_transfer_stats,
                                  tree_sync_host)

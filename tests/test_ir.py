@@ -54,3 +54,13 @@ def test_print_roundtrip_contains_structure():
     g, *_ = _g()
     s = str(g)
     assert "func @f" in s and "linalg.add" in s and "return" in s
+
+
+def test_nbytes_bf16_is_two_bytes_per_elem():
+    # _np_dtype maps bf16->float32 for numpy compat; nbytes must not
+    # inherit the 4-byte itemsize (VMEM heuristics would size 2x)
+    t16 = TensorType((128, 256), "bf16")
+    t32 = TensorType((128, 256), "float32")
+    assert t16.nbytes == 128 * 256 * 2
+    assert t32.nbytes == 128 * 256 * 4
+    assert TensorType((8,), "bfloat16").nbytes == 16

@@ -189,3 +189,28 @@ def test_decode_attention_kernel_sweep(rng, hq, hkv, s, window):
     exp = ref.decode_attention(q, k, v, jnp.asarray(lengths),
                                window=window)
     np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-4)
+
+
+def test_csr_to_ell_zero_rows_regression():
+    # n_rows == 0: indptr is the single sentinel 0 — conversion must
+    # produce a well-formed all-padding ELL, and spmv must not launch a
+    # zero-grid pallas call
+    indptr = np.zeros(1, np.int32)
+    empty_i = np.zeros(0, np.int32)
+    empty_v = np.zeros(0, np.float32)
+    ell = csr_to_ell(indptr, empty_i, empty_v, 0, 4)
+    assert ell.values.shape == (0, 8)
+    assert ell.indices.shape == (0, 8) and ell.valid.shape == (0, 8)
+    x = np.ones(4, np.float32)
+    y = spmv_ell(ell, x, interpret=True)
+    assert y.shape == (0,)
+    y2 = spmv_csr(indptr, empty_i, empty_v, x, n_rows=0, interpret=True)
+    assert y2.shape == (0,)
+
+
+def test_csr_to_ell_zero_rows_static_width_jittable():
+    indptr = np.zeros(1, np.int32)
+    empty_i = np.zeros(0, np.int32)
+    empty_v = np.zeros(0, np.float32)
+    ell = csr_to_ell(indptr, empty_i, empty_v, 0, 4, max_nnz_row=3)
+    assert ell.values.shape == (0, 8)   # padded to pad_to
