@@ -2,7 +2,7 @@
 
 The paper's point: vectorize the *batch* dimension when matrices are
 small.  Compares the pipeline's batch-vectorized Pallas lowering (the
-tile-mapping ``vectorize_batch`` heuristic) against plain XLA batching,
+map_parallelism ``vectorize_batch`` heuristic) against plain XLA batching,
 over (batch × m) sweeps."""
 from __future__ import annotations
 
@@ -18,8 +18,6 @@ def main(print_rows=True, smoke=False):
     import jax
     import jax.numpy as jnp
 
-    from repro.core.options import CompileOptions
-    from repro.core.passes import choose_matmul_blocks
     from repro.kernels.batched_gemm import batched_gemm
 
     rng = np.random.default_rng(0)

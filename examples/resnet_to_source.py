@@ -23,7 +23,7 @@ def main():
         lambda x: resnet18_forward(weights, x), image,
         options=CompileOptions(fuse_elementwise=False), name="forward")
     n_ops = len(mod.graph.ops)
-    n_syncs = sum(1 for op in mod.graph.ops if op.opname == "tpu.sync")
+    n_syncs = sum(1 for op in mod.graph.ops if op.opname == "kokkos.sync")
     print(f"[example] lowered ResNet18: {n_ops} IR ops, "
           f"{n_syncs} lazy weight syncs")
 

@@ -8,9 +8,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.backend import (Backend, LIBRARY_PREFERRED, LOWERED_PIPELINE,
-                                TENSOR_PIPELINE, get_backend,
-                                register_backend)
+from repro.core.backend import (Backend, LIBRARY_PREFERRED, TPU_HIERARCHY,
+                                get_backend, register_backend)
 
 
 def _load_kernels() -> None:
@@ -38,7 +37,8 @@ register_backend(Backend(
     description="XLA library path (TPU's cuBLAS: MXU dot_general; "
                 "linalg-to-kokkoskernels analogue)",
     capabilities=frozenset({"library", "source-emission", "sparse"}),
-    pipeline=TENSOR_PIPELINE,
+    hierarchy=TPU_HIERARCHY,     # same chip; the library owns the mapping,
+                                 # so map_parallelism collapses nests
     loader=_load_kernels,
 ))
 
@@ -47,7 +47,7 @@ register_backend(Backend(
     description="hand-tiled Pallas kernels (the pure-Kokkos lowering path)",
     capabilities=frozenset({"custom-kernels", "loop-nests", "sparse",
                             "ell-layout"}),
-    pipeline=LOWERED_PIPELINE,
+    hierarchy=TPU_HIERARCHY,     # nests map onto grid × block × lane
     fallbacks=("xla",),
     loader=_load_kernels,
     passes_interpret=True,
@@ -58,7 +58,7 @@ register_backend(Backend(
     description="per-op heuristic: library for hand-optimized ops, "
                 "kernels elsewhere when a TPU backs them",
     capabilities=frozenset({"library", "sparse"}),
-    pipeline=TENSOR_PIPELINE,
+    hierarchy=TPU_HIERARCHY,
     fallbacks=("xla",),
     loader=_load_kernels,
     selector=_auto_select,

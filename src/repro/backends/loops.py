@@ -15,8 +15,22 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.backend import (Backend, LOWERED_PIPELINE, register_backend,
-                                register_kernel)
+from repro.core.backend import (Backend, LevelSpec, ParallelHierarchy,
+                                register_backend, register_kernel)
+
+# The declared hierarchy: sequential host loops around a jnp-vectorized
+# innermost level.  Widths/extents mirror the TPU geometry so tiling
+# choices stay comparable across backends in side-by-side benchmarks;
+# the *names* and exec space are what make the mapping honest — a
+# ``kokkos.team_parallel`` nest on this backend reads
+# serial → serial-block → jnp-vector in the IR dump.
+SERIAL_HIERARCHY = ParallelHierarchy(
+    exec_space="host",
+    levels=(LevelSpec("serial"),
+            LevelSpec("serial-block", width=8, max_extent=512),
+            LevelSpec("jnp-vector", width=128, max_extent=1024)),
+    scratch_bytes=96 * 2**20,
+    compute_unit=128)
 
 # Cap on a single tile's broadcast working set (bm × k × n elements).  The
 # loop nest materializes the elementwise product before reducing, so the
@@ -77,18 +91,19 @@ def batched_gemm_loops(a, b, *, tiling=None):
     return out.reshape(tuple(batch) + (m, n)).astype(a.dtype)
 
 
-def _grid_parallel_loops(op, options):
-    """Interpret a tile-mapped ``tpu.grid_parallel`` op as a Python grid
-    loop over row blocks with the op's jnp body applied per tile."""
+def _parallel_nest_loops(op, options):
+    """Interpret a mapped ``kokkos.range_parallel``/``kokkos.team_parallel``
+    nest as a Python serial loop over row blocks with the op's jnp body
+    applied per tile."""
     fn = op.attrs["fn"]
     kind = op.attrs["kind"]
     shape = op.results[0].type.shape
     block = (op.attrs.get("tiling") or {}).get("block", shape)
     if kind == "reduce":
         # tiling splits axis 0, so the reduced axis must not be axis 0 —
-        # currently guaranteed by linalg_to_loops (last-axis softmax only),
-        # but guard here so extending that pass can't silently slice a
-        # reduction apart
+        # currently guaranteed by linalg_to_parallel (last-axis softmax
+        # only), but guard here so extending that pass can't silently
+        # slice a reduction apart
         axis = op.attrs.get("axis", -1)
         ndim = len(shape)
         if ndim < 2 or axis % ndim == 0:
@@ -106,8 +121,8 @@ def _grid_parallel_loops(op, options):
 
 
 def _loops_executor(op, options):
-    if op.opname == "tpu.grid_parallel":
-        return _grid_parallel_loops(op, options)
+    if op.opname in ("kokkos.range_parallel", "kokkos.team_parallel"):
+        return _parallel_nest_loops(op, options)
     return None
 
 
@@ -155,7 +170,7 @@ register_backend(Backend(
                 "generated-Kokkos-loops path; reference/baseline)",
     capabilities=frozenset({"loop-nests", "reference", "sparse",
                             "ell-layout"}),
-    pipeline=LOWERED_PIPELINE,
+    hierarchy=SERIAL_HIERARCHY,
     fallbacks=("xla",),
     op_executor=_loops_executor,
 ))

@@ -12,6 +12,11 @@ architecture / lowering strategy:
   instead of comparing target strings — e.g. the ``sparsify`` pass lowers
   sparse-encoded linalg ops only for backends declaring ``sparse``, and
   inserts the CSR→ELL ``sparse.convert`` only for ``ell-layout`` backends;
+* a declarative :class:`ParallelHierarchy` — the physical parallelism and
+  memory geometry of the architecture (level names, widths, scratch
+  budget, matmul unit).  The ``map_parallelism`` pass reads it to bind
+  logical ``kokkos.*`` nests and tiling heuristics to this backend; a new
+  architecture is a new *mapping*, declared here, never a new pass;
 * a **pipeline spec** — the ordered pass names ``PassManager`` runs for this
   backend (the per-target lowering composition of the paper's Table 4.2);
 * **per-op kernel registrations** in a central ``opname → {backend: fn}``
@@ -19,8 +24,8 @@ architecture / lowering strategy:
 * an optional **selector hook** implementing a cost/choice model per op
   (the linalg-to-kokkoskernels library-vs-generated-loops decision);
 * an optional **op executor hook** letting the backend claim whole IR ops
-  at emit time (how the ``loops`` reference backend interprets
-  ``tpu.grid_parallel`` nests without Pallas).
+  at emit time (how the ``loops`` reference backend interprets mapped
+  ``kokkos.*_parallel`` nests without Pallas).
 
 Backends register themselves via :func:`register_backend`; third-party
 backends live in the ``repro.backends`` plugin package, which
@@ -32,18 +37,112 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
-# Pass-name pipelines (resolved by repro.core.passmgr at run time).
-# TENSOR_PIPELINE keeps elementwise/reduction ops at tensor level where the
-# library's own fusion wins; LOWERED_PIPELINE adds the
-# dense-linalg-to-parallel-loops lowering for backends that execute explicit
-# loop nests (paper: OpenMP vs CUDA lowerings differ per target too).
-TENSOR_PIPELINE = ("fuse_elementwise", "sparsify", "linalg_to_library",
-                   "tile_mapping", "dualview_management")
-LOWERED_PIPELINE = ("fuse_elementwise", "sparsify", "linalg_to_library",
-                    "linalg_to_loops", "tile_mapping",
-                    "dualview_management")
+# The default pass pipeline (resolved by repro.core.passmgr at run time).
+# One pipeline for every backend: lowering to the logical ``kokkos.*``
+# dialect is backend-neutral, and the per-target divergence lives entirely
+# in ``map_parallelism`` reading each backend's ParallelHierarchy (library
+# backends collapse nests to fused ``kk.*``-style calls, loop backends get
+# physical level bindings).  The seed kept two hand-maintained pipelines
+# (TENSOR vs LOWERED) to encode that difference structurally.
+DEFAULT_PIPELINE = ("fuse_elementwise", "sparsify", "linalg_to_library",
+                    "linalg_to_parallel", "map_parallelism",
+                    "memory_space_management")
+
+
+# ---------------------------------------------------------------------------
+# ParallelHierarchy — the declarative per-architecture parallelism spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """One physical level of a backend's parallel hierarchy.
+
+    ``width`` is the alignment unit a block extent should be a multiple
+    of along this level (TPU lane 128, sublane 8; a GPU plugin would say
+    warp 32); ``max_extent`` caps a single block's extent (None =
+    unbounded, e.g. a grid dimension)."""
+
+    name: str
+    width: int = 1
+    max_extent: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelHierarchy:
+    """Declarative description of one architecture's parallelism — what
+    the paper's Kokkos backends give LAPIS for free and the seed
+    hard-coded as ``lane_width``/``sublane_width`` compile options.
+
+    ``levels`` runs outermost → innermost.  ``exec_space`` names where
+    mapped nests execute (``device``/``host``); ``scratch_bytes`` is the
+    fast-memory budget one team may hold (TPU VMEM, GPU shared memory);
+    ``compute_unit`` the matmul tile edge (MXU edge, tensor-core shape).
+    The tiling heuristics in ``repro.core.passes`` read ONLY this record,
+    so retargeting them is declaring a new hierarchy, not editing a pass.
+    """
+
+    exec_space: str = "device"
+    levels: tuple = ()
+    scratch_bytes: int = 96 * 2**20
+    compute_unit: int = 128
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    @property
+    def vector_width(self) -> int:
+        """Innermost (vector/lane) alignment width."""
+        return self.levels[-1].width if self.levels else 1
+
+    @property
+    def team_width(self) -> int:
+        """Second-innermost (team/sublane) alignment width."""
+        return self.levels[-2].width if self.depth >= 2 else 1
+
+    def map_levels(self, nest: Sequence[str]) -> tuple:
+        """Bind a logical nest (outer→inner level names) to this
+        hierarchy's physical level names.  The innermost logical level
+        lands on the innermost physical level and so on outward; when
+        the logical nest is deeper than the hierarchy, the extra outer
+        logical levels all collapse onto the outermost physical level
+        (a league deeper than the grid is still grid steps)."""
+        if not self.levels:
+            return ("fused",) * len(nest)
+        phys = [s.name for s in self.levels]
+        out = []
+        for i, _ in enumerate(nest):
+            j = len(phys) - (len(nest) - i)
+            out.append(phys[max(j, 0)])
+        return tuple(out)
+
+    # -- declarative round-trip (plugins may ship hierarchies as data) ------
+    def to_dict(self) -> dict:
+        return {"exec_space": self.exec_space,
+                "scratch_bytes": self.scratch_bytes,
+                "compute_unit": self.compute_unit,
+                "levels": [dataclasses.asdict(s) for s in self.levels]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ParallelHierarchy":
+        return cls(exec_space=d.get("exec_space", "device"),
+                   scratch_bytes=d.get("scratch_bytes", 96 * 2**20),
+                   compute_unit=d.get("compute_unit", 128),
+                   levels=tuple(LevelSpec(**s) for s in d.get("levels", ())))
+
+
+# The TPU chip geometry (v5e-shaped): grid steps over (8-sublane ×
+# 128-lane) VMEM blocks.  Declared once, shared by every backend that
+# maps onto the physical TPU (pallas directly, xla through the library).
+TPU_HIERARCHY = ParallelHierarchy(
+    exec_space="device",
+    levels=(LevelSpec("grid"),
+            LevelSpec("block", width=8, max_extent=512),
+            LevelSpec("lane", width=128, max_extent=1024)),
+    scratch_bytes=96 * 2**20,      # usable VMEM per core (v5e ~128MiB)
+    compute_unit=128)              # MXU systolic array edge
 
 # Ops for which the library path is known hand-optimized (paper: "operations
 # that we know are hand-optimized" get intercepted with library calls).
@@ -74,7 +173,8 @@ class Backend:
     name: str
     description: str = ""
     capabilities: frozenset = frozenset()
-    pipeline: tuple = TENSOR_PIPELINE
+    pipeline: tuple = DEFAULT_PIPELINE
+    hierarchy: ParallelHierarchy = TPU_HIERARCHY
     fallbacks: tuple = ()                    # tried in order after `name`
     loader: Optional[Callable] = None        # imports kernel modules (idempotent)
     selector: Optional[Callable] = None      # (backend, opname, options) -> name

@@ -4,9 +4,12 @@ Two outputs from a lowered graph:
 
 * ``build_callable`` — an executable JAX callable (the KokkosBackend /
   RefBackend-replacement path of the paper's §5 pipeline).  ``kk.*`` ops
-  dispatch through the registry (library vs Pallas), ``tpu.grid_parallel``
-  ops become ``pl.pallas_call`` invocations built from the tile-mapping
-  attrs, and ``tpu.sync`` drives the lazy DualView runtime.
+  dispatch through the registry (library vs Pallas); mapped
+  ``kokkos.range_parallel`` / ``kokkos.team_parallel`` nests become
+  ``pl.pallas_call`` invocations built from the map_parallelism attrs
+  (collapsed nests on library backends run as one fused call, and a
+  backend's op-executor hook may claim them outright); ``kokkos.sync``
+  drives the lazy DualView runtime.
 
 * ``emit_python_source`` — freestanding Python source with **weights
   embedded** (the paper's "C++ file with no dependencies besides Kokkos,
@@ -38,9 +41,10 @@ from repro.core.options import CompileOptions, current_options
 # executable path
 # ---------------------------------------------------------------------------
 
-def _grid_parallel_callable(op: Op, options: CompileOptions) -> Callable:
-    """Materialize a tpu.grid_parallel op as a Pallas call (map/reduce
-    kernels are generic; the fn from the IR runs on VMEM blocks)."""
+def _parallel_callable(op: Op, options: CompileOptions) -> Callable:
+    """Materialize a mapped kokkos.*_parallel nest as a Pallas call
+    (map/reduce kernels are generic; the fn from the IR runs on blocks
+    shaped by the backend's hierarchy)."""
     from repro.kernels import generic
     kind = op.attrs["kind"]
     tiling = op.attrs["tiling"]
@@ -62,7 +66,7 @@ def _grid_parallel_callable(op: Op, options: CompileOptions) -> Callable:
 def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
     from repro.core import registry
     # a backend may claim any op outright (e.g. the `loops` reference
-    # backend interprets tpu.grid_parallel nests in pure jnp, no Pallas)
+    # backend interprets kokkos.*_parallel nests in pure jnp, no Pallas)
     backend = options.backend()
     if backend.op_executor is not None:
         ex = backend.op_executor(op, options)
@@ -86,8 +90,12 @@ def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
             return lambda *a, _fn=fn, _t=tiling: _fn(*a, tiling=_t,
                                                      **_op_kwargs(op))
         return lambda *a, _fn=fn: _fn(*a, **_op_kwargs(op))
-    if op.opname == "tpu.grid_parallel":
-        return _grid_parallel_callable(op, options)
+    if op.opname in ("kokkos.range_parallel", "kokkos.team_parallel"):
+        if op.attrs.get("collapse"):
+            # library mapping: the whole nest is one fused kk.*-style
+            # call — the composed jnp body, fused by the library's jit
+            return op.attrs["fn"]
+        return _parallel_callable(op, options)
     return None
 
 
@@ -110,7 +118,8 @@ def build_callable(graph: Graph,
     options = options or current_options()
 
     # constants → DualViews (host-resident until first device use; the
-    # tpu.sync inserted by dualview_management triggers the lazy h2d copy)
+    # kokkos.sync inserted by memory_space_management triggers the lazy
+    # h2d copy)
     const_views: dict = {}
     executors = []  # (op, callable|None)
     for op in graph.ops:
@@ -119,9 +128,9 @@ def build_callable(graph: Graph,
                                     name=f"const_{op.results[0].id}")
             const_views[op.results[0].id] = dv
             executors.append((op, None))
-        elif op.opname == "tpu.sync":
+        elif op.opname == "kokkos.sync":
             executors.append((op, None))
-        elif op.opname == "tpu.modify":
+        elif op.opname == "kokkos.modify":
             executors.append((op, None))
         else:
             ex = _op_callable(op, options)
@@ -142,7 +151,7 @@ def build_callable(graph: Graph,
                 dv = const_views[op.results[0].id]
                 # value lands in env at sync time (lazy); put view for now
                 env[op.results[0].id] = dv
-            elif op.opname == "tpu.sync":
+            elif op.opname == "kokkos.sync":
                 v = env[op.operands[0].id]
                 if op.attrs.get("space") == "host_roundtrip":
                     # eager baseline-MLIR mode: force d2h + h2d around
@@ -157,7 +166,7 @@ def build_callable(graph: Graph,
                         TRANSFERS["h2d"] += 1
                 elif isinstance(v, DualView):
                     env[op.operands[0].id] = v.device()  # lazy h2d
-            elif op.opname == "tpu.modify":
+            elif op.opname == "kokkos.modify":
                 v = env[op.operands[0].id]
                 if isinstance(v, DualView):
                     v.modify_device()
@@ -404,9 +413,10 @@ def emit_python_source(graph: Graph,
         return f"v{n[0]}"
 
     for op in graph.ops:
-        if op.opname in ("tpu.sync", "tpu.modify"):
+        if op.opname in ("kokkos.sync", "kokkos.modify"):
             val = names[op.operands[0].id]
-            body.append(f"# kokkos.sync {val} {{Device}} — lazy h2d on "
+            space = op.attrs.get("space", "device")
+            body.append(f"# {op.opname} {val} {{{space}}} — lazy h2d on "
                         "first use (weights loaded by lapis_initialize)")
             continue
         for r in op.results:
@@ -424,10 +434,11 @@ def emit_python_source(graph: Graph,
                 consts[key] = value
                 body.append(f"{res} = _WEIGHTS[{key!r}]")
             continue
-        if op.opname == "tpu.grid_parallel":
-            # source path uses library semantics for generic loops: emit the
-            # original tensor-level op recorded in attrs["src"] (attr-aware
-            # ops like softmax go through _src_line via a proxy op)
+        if op.opname in ("kokkos.range_parallel", "kokkos.team_parallel"):
+            # source path uses library semantics for parallel nests: emit
+            # the original tensor-level op recorded in attrs["src"]
+            # (attr-aware ops like softmax go through _src_line via a
+            # proxy op)
             src_name = op.attrs.get("src", "")
             fn_src = _SRC_OPS.get(src_name)
             a = [names[o.id] for o in op.operands]
@@ -440,7 +451,8 @@ def emit_python_source(graph: Graph,
                            attrs={k: v for k, v in op.attrs.items()
                                   if k not in ("fn", "tiling", "kind",
                                                "iter_space", "level_map",
-                                               "src", "ops")})
+                                               "nest", "exec_space",
+                                               "collapse", "src", "ops")})
                 for pr, rr in zip(proxy.results, op.results):
                     names[pr.id] = names[rr.id]
                 body.append(_src_line(proxy, names))

@@ -3,10 +3,19 @@
 The IR is deliberately MLIR-shaped: a ``Graph`` (≈ func.func) holds ``Op``s in
 SSA form over ``Value``s typed by ``TensorType``.  Ops are namespaced into
 dialects (``linalg.*`` high-level tensor ops, ``sparse.*`` sparse-tensor
-storage ops, ``kk.*`` Kokkos-Kernels-style library calls, ``loops.*``
-mid-level parallel loop nests, ``tpu.*`` the TPU-adapted Kokkos dialect).
-Passes rewrite ops in place; the emitter walks the final graph and produces
-an executable JAX callable and/or Python source.
+storage ops, ``kk.*`` Kokkos-Kernels-style library calls, ``kokkos.*`` the
+hierarchical execution-space-aware parallel dialect).  Passes rewrite ops in
+place; the emitter walks the final graph and produces an executable JAX
+callable and/or Python source.
+
+The ``kokkos.*`` dialect (paper §3: "a dialect built on the principles of
+the Kokkos ecosystem") is backend-neutral: ``kokkos.range_parallel`` /
+``kokkos.team_parallel`` carry a *logical* nest of named levels
+(``league``/``team``/``vector`` — :class:`LoopLevel`) plus an
+``exec_space`` attr, and the per-backend ``map_parallelism`` pass maps
+those logical levels onto whatever physical hierarchy the backend
+declares (a :class:`~repro.core.backend.ParallelHierarchy`).  No op in
+this file knows about lanes, warps, or grids.
 """
 from __future__ import annotations
 
@@ -18,22 +27,49 @@ import numpy as np
 
 
 class MemorySpace(enum.Enum):
-    """Kokkos-inspired memory spaces, adapted to the TPU hierarchy.
+    """Kokkos memory spaces.  Every SSA value carries one; the
+    ``memory_space_management`` pass assigns them and inserts the lazy
+    ``kokkos.sync``/``kokkos.modify`` ops that keep DUAL buffers
+    coherent — the single space framework replacing the seed's ad-hoc
+    DualView flag plumbing.
 
-    ANY    — unassigned (pre-dualview-pass).
-    HOST   — host DRAM (numpy side of a DualView).
-    DEVICE — accelerator HBM.
-    DUAL   — mirrored host+device buffer with lazy sync (LAPIS::DualView).
-    VMEM   — on-chip vector memory (Pallas block operand).
-    SMEM   — scalar memory (Pallas scalar prefetch operands).
+    ANY     — unassigned (pre-memory-space pass).
+    HOST    — host DRAM (numpy side of a DualView).
+    DEVICE  — accelerator memory (the resolved backend's exec space).
+    DUAL    — mirrored host+device buffer with lazy sync (LAPIS::DualView).
+    SCRATCH — fast per-team memory (Kokkos scratch; VMEM on TPU,
+              shared memory on GPU).
+    SMEM    — scalar memory (Pallas scalar prefetch operands).
     """
 
     ANY = "any"
     HOST = "host"
     DEVICE = "device"
     DUAL = "dual"
-    VMEM = "vmem"
+    SCRATCH = "scratch"
     SMEM = "smem"
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopLevel:
+    """One level of a *logical* ``kokkos.*`` parallel nest.
+
+    ``name`` is backend-neutral — ``league`` (outer blocks), ``team``
+    (cooperating workers), ``vector`` (innermost SIMD lanes), or
+    ``range`` (a flat 1-D RangePolicy).  The ``map_parallelism`` pass
+    later binds each logical level to a physical level of the backend's
+    declared :class:`~repro.core.backend.ParallelHierarchy`; until then
+    the nest says only *what* parallelism exists, never *where* it runs
+    (the paper's nesting-depth → policy decision table, §4.2).
+    """
+
+    name: str
+    trip: int
+
+    def __str__(self) -> str:
+        return f"{self.name}:{self.trip}"
+
+    __repr__ = __str__          # compact IR dumps: nest=(league:4, vector:128)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -296,7 +332,7 @@ def _print_op(op: Op, indent: int):
 
 
 # Ops that must never be DCE'd (memory-model bookkeeping).
-SIDE_EFFECTING_OPS = {"tpu.sync", "tpu.modify", "loops.store_tile"}
+SIDE_EFFECTING_OPS = {"kokkos.sync", "kokkos.modify"}
 
 
 # --------------------------------------------------------------------------
@@ -322,5 +358,7 @@ LINALG_SHAPE = {"tensor.reshape", "tensor.transpose", "tensor.slice",
 KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv", "kk.spmm",
           "kk.attention", "kk.rwkv6_scan", "kk.rglru_scan", "kk.conv2d",
           "kk.fused_elementwise"}
-LOOPS_OPS = {"loops.parallel", "loops.sequential_scan"}
-TPU_OPS = {"tpu.grid_parallel", "tpu.sync", "tpu.modify"}
+# The hierarchical parallel dialect: logical nests awaiting (or carrying)
+# a per-backend level mapping, plus the memory-space coherence ops.
+KOKKOS_PARALLEL_OPS = {"kokkos.range_parallel", "kokkos.team_parallel"}
+KOKKOS_OPS = KOKKOS_PARALLEL_OPS | {"kokkos.sync", "kokkos.modify"}

@@ -281,9 +281,9 @@ def _sparse_via_pipeline(opname: str, arrays: tuple, kwargs: dict):
     options = current_options()
     specs = tuple(jax.ShapeDtypeStruct(a.shape, jnp.dtype(a.dtype))
                   for a in arrays)
-    # every options field affects compilation (tiling heuristics read
-    # lane_width/vmem_limit_bytes, the PassManager reads verify_ir/…), so
-    # key on the whole record plus the host-resolved interpret flag
+    # every options field affects compilation (tiling heuristics read the
+    # hierarchy override, the PassManager reads verify_ir/…), so key on
+    # the whole record plus the host-resolved interpret flag
     key = (opname,
            tuple((s.shape, s.dtype.name) for s in specs),
            tuple(sorted(kwargs.items())),

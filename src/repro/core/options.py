@@ -38,10 +38,8 @@ class CompileOptions:
     lazy_dualview: bool = True           # paper's lazy sync (False = eager
                                          # copies, the baseline-MLIR mode)
     embed_constants: bool = True         # weights embedded in emitted source
-    vmem_limit_bytes: int = 96 * 2**20   # usable VMEM per core (v5e ~128MiB)
-    lane_width: int = 128                # TPU lane width (paper: warp 32)
-    sublane_width: int = 8
-    mxu_dim: int = 128                   # MXU systolic array edge
+    hierarchy: Optional[object] = None   # ParallelHierarchy override; None →
+                                         # the resolved backend's declared one
     donate_buffers: bool = True
     verify_ir: bool = False              # PassManager: verify SSA per pass
     print_ir_after_all: bool = False     # PassManager: dump IR per pass
@@ -55,6 +53,14 @@ class CompileOptions:
         """Resolve ``target`` to its registered Backend object."""
         from repro.core import backend as backend_mod
         return backend_mod.resolve(self.target)
+
+    def resolve_hierarchy(self):
+        """The ParallelHierarchy the mapping/tiling passes consult: an
+        explicit override wins, else the resolved backend's declared
+        spec (the seed carried TPU lane/sublane constants here instead,
+        which made every backend TPU-shaped)."""
+        return self.hierarchy if self.hierarchy is not None \
+            else self.backend().hierarchy
 
 
 _tls = threading.local()

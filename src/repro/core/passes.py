@@ -1,25 +1,32 @@
-"""The LAPIS lowering pipeline, adapted to TPU (paper §4, Table 4.2).
+"""The LAPIS lowering pipeline (paper §4, Table 4.2) — backend-neutral.
 
-Pass order (mirrors the paper's pipeline):
+Pass order (mirrors the paper's pipeline; one pipeline for every backend):
 
-1. ``fuse_elementwise``        [beyond paper] chain-fuse elementwise ops.
-2. ``sparsify``                [sparse-compiler-kokkos] pick the storage
-                               layout for sparse-encoded operands (CSR→ELL
-                               ``sparse.convert`` when the backend wants the
-                               lane-parallel layout and the stats allow) and
-                               lower ``linalg.spmv_csr``/``linalg.spmm_csr``
-                               to ``kk.spmv``/``kk.spmm`` with §4.2 tiling.
-3. ``linalg_to_library``       [linalg-to-kokkoskernels] matmul/gemv →
-                               ``kk.*`` library-call ops.
-4. ``linalg_to_loops``         [dense-linalg-to-parallel-loops] remaining
-                               dense ops → ``loops.parallel`` nests.
-5. ``tile_mapping``            [kokkos-loop-mapping] map loop nests onto the
-                               TPU hierarchy (grid / VMEM block / 128-lane
-                               vector) and compute *heuristic* block shapes —
-                               the team-size / vector-length analogue.
-6. ``dualview_management``     [kokkos-dualview-management] assign memory
-                               spaces and insert lazy ``tpu.sync`` /
-                               ``tpu.modify`` ops.
+1. ``fuse_elementwise``          [beyond paper] chain-fuse elementwise ops.
+2. ``sparsify``                  [sparse-compiler-kokkos] pick the storage
+                                 layout for sparse-encoded operands (CSR→ELL
+                                 ``sparse.convert`` when the backend wants
+                                 the vector-parallel layout and the stats
+                                 allow) and lower ``linalg.spmv_csr``/
+                                 ``linalg.spmm_csr`` to ``kk.spmv``/
+                                 ``kk.spmm`` with §4.2 tiling.
+3. ``linalg_to_library``         [linalg-to-kokkoskernels] matmul/gemv →
+                                 ``kk.*`` library-call ops.
+4. ``linalg_to_parallel``        [dense-linalg-to-parallel-loops] remaining
+                                 dense ops → *logical* ``kokkos.*`` nests:
+                                 the §4.2 decision table (depth 1 → range,
+                                 2 → team+vector, ≥3 → league+team+vector),
+                                 no hardware names anywhere.
+5. ``map_parallelism``           [kokkos-loop-mapping] bind each logical
+                                 nest and each ``kk.*`` op to the backend's
+                                 declared ParallelHierarchy: physical level
+                                 names, exec space, and heuristic block
+                                 shapes (team-size / vector-length).
+                                 Library backends collapse nests to fused
+                                 ``kk.*``-style calls instead.
+6. ``memory_space_management``   [kokkos-dualview-management] assign memory
+                                 spaces to every value and insert the lazy
+                                 ``kokkos.sync`` / ``kokkos.modify`` ops.
 """
 from __future__ import annotations
 
@@ -31,8 +38,9 @@ from typing import Optional
 import numpy as np
 
 from repro.core import refs
-from repro.core.ir import (Graph, LINALG_ELEMENTWISE, LINALG_MATMUL_LIKE,
-                           LINALG_REDUCTION, LINALG_SPARSE, MemorySpace, Op,
+from repro.core.ir import (Graph, KOKKOS_PARALLEL_OPS, LINALG_ELEMENTWISE,
+                           LINALG_MATMUL_LIKE, LINALG_REDUCTION,
+                           LINALG_SPARSE, LoopLevel, MemorySpace, Op,
                            TensorType, dtype_itemsize)
 from repro.core.options import CompileOptions, current_options
 from repro.core.passmgr import PassManager, register_pass
@@ -169,6 +177,7 @@ def sparsify(graph: Graph,
     backend = options.backend()
     if not backend.has_capability("sparse"):
         return 0
+    hier = options.resolve_hierarchy()
     rewritten = 0
     for op in list(graph.ops):
         kk = _SPARSE_TO_KK.get(op.opname)
@@ -181,7 +190,10 @@ def sparsify(graph: Graph,
         n_rows = a.type.shape[0]
         nnz_mean = (op.attrs.get("nnz_mean") or enc.nnz_mean or
                     (enc.nnz / max(n_rows, 1) if enc.nnz else 1.0))
-        tiling = choose_spmv_tiling(n_rows, nnz_mean, options)
+        tiling = choose_spmv_tiling(n_rows, nnz_mean, hier)
+        # logical nest of the sparse contraction (bound to physical
+        # levels the same way map_parallelism binds dense nests)
+        nest = ("league", "team", "vector")
         new_ops = []
         if backend.has_capability("ell-layout") and \
                 enc.max_nnz_row is not None:
@@ -195,8 +207,8 @@ def sparsify(graph: Graph,
             a = conv.results[0]
         new = Op(kk, [a, dense], [r.type for r in op.results],
                  attrs={**op.attrs, "tiling": tiling,
-                        "level_map": ("grid(row-block)", "row",
-                                      "lane(ell)")})
+                        "exec_space": hier.exec_space,
+                        "level_map": hier.map_levels(nest)})
         new_ops.append(new)
         graph.replace_op(op, new_ops, dict(zip(op.results, new.results)))
         rewritten += 1
@@ -236,32 +248,46 @@ def linalg_to_library(graph: Graph,
 
 
 # ---------------------------------------------------------------------------
-# 4. dense-linalg-to-parallel-loops
+# 4. dense-linalg-to-parallel-loops (logical kokkos.* nests)
 # ---------------------------------------------------------------------------
 
 _LOOPABLE = LINALG_ELEMENTWISE | LINALG_REDUCTION | {"kk.fused_elementwise"}
 
 
+def _logical_nest(shape: tuple) -> tuple:
+    """The paper's nesting-depth → policy decision table (§4.2), producing
+    logical level names only: depth 1 → a flat RangePolicy, depth 2 →
+    team+vector, depth ≥3 → league(s)+team+vector.  Physical meaning is
+    assigned later by ``map_parallelism`` per backend."""
+    if not shape:
+        return ()
+    if len(shape) == 1:
+        return (LoopLevel("range", shape[0]),)
+    levels = [LoopLevel("league", d) for d in shape[:-2]]
+    levels.append(LoopLevel("team", shape[-2]))
+    levels.append(LoopLevel("vector", shape[-1]))
+    return tuple(levels)
+
+
 @register_pass()
-def linalg_to_loops(graph: Graph,
-                    options: Optional[CompileOptions] = None) -> int:
-    """Lower remaining dense elementwise/reduction ops to ``loops.parallel``
-    nests over their iteration space.  Only runs for backends with the
-    ``loop-nests`` capability (pallas, loops) — on library backends these
-    ops stay at tensor level where XLA's own fusion is the better "backend"
-    (the paper keeps such choices per-target too: OpenMP vs CUDA lowerings
-    differ)."""
+def linalg_to_parallel(graph: Graph,
+                       options: Optional[CompileOptions] = None) -> int:
+    """Lower remaining dense elementwise/reduction ops to *logical*
+    ``kokkos.range_parallel`` / ``kokkos.team_parallel`` nests over their
+    iteration space.  Runs for every backend — the nest carries named
+    levels (league/team/vector) and trip counts but no hardware mapping,
+    so this pass never needs to know whether the target is a TPU grid, a
+    GPU block, or a sequential host loop (that is ``map_parallelism``'s
+    job, and library backends collapse the nest there)."""
     options = options or current_options()
-    if not options.backend().has_capability("loop-nests"):
-        return 0
     lowered = 0
     for op in list(graph.ops):
         if op.opname not in _LOOPABLE:
             continue
         if op.opname in LINALG_REDUCTION:
             # only shape-preserving row reductions (softmax over the last
-            # dim) lower to blocked loops — the reduced axis must fit one
-            # VMEM block and in/out blocks must agree (paper: loops whose
+            # dim) lower to blocked nests — the reduced axis must fit one
+            # block and in/out blocks must agree (paper: loops whose
             # structure the mapping can't prove stay at the higher level)
             if op.opname != "linalg.softmax":
                 continue
@@ -276,11 +302,15 @@ def linalg_to_loops(graph: Graph,
         if any(o.type.shape != op.operands[0].type.shape
                for o in op.operands):
             continue  # broadcasting nests stay at tensor level
+        shape = tuple(op.results[0].type.shape)
+        nest = _logical_nest(shape)
+        opname = ("kokkos.range_parallel" if len(nest) <= 1
+                  else "kokkos.team_parallel")
         fn = refs.op_ref(op.opname, op.attrs)
-        new = Op("loops.parallel", op.operands,
+        new = Op(opname, op.operands,
                  [r.type for r in op.results],
                  attrs={"kind": kind, "fn": fn, "src": op.opname,
-                        "iter_space": tuple(op.results[0].type.shape),
+                        "nest": nest, "iter_space": shape,
                         **{k: v for k, v in op.attrs.items()
                            if k in ("axis", "keepdims")}})
         graph.replace_op(op, [new], dict(zip(op.results, new.results)))
@@ -289,7 +319,7 @@ def linalg_to_loops(graph: Graph,
 
 
 # ---------------------------------------------------------------------------
-# 5. kokkos-loop-mapping → TPU tile mapping
+# 5. kokkos-loop-mapping → map_parallelism
 # ---------------------------------------------------------------------------
 
 def _round_up(x: int, m: int) -> int:
@@ -301,87 +331,108 @@ def _round_down_pow2(x: int) -> int:
 
 
 def choose_matmul_blocks(m: int, n: int, k: int, itemsize: int,
-                         options: CompileOptions) -> dict:
-    """Heuristic MXU block shapes — the paper's TeamPolicy team-size /
-    vector-length heuristics, re-derived for the TPU hierarchy.
+                         hier) -> dict:
+    """Heuristic matmul block shapes — the paper's TeamPolicy team-size /
+    vector-length heuristics, driven by the backend's declared
+    :class:`~repro.core.backend.ParallelHierarchy`.
 
-    Goals (paper §4.2 adapted): (i) last dim a multiple of the 128-wide lane
-    unit so loads coalesce into full (8,128) registers; (ii) both matmul
-    operands + accumulator fit the VMEM budget; (iii) MXU dims multiples of
-    128 so the systolic array is fully occupied.
+    Goals (paper §4.2 adapted): (i) last dim a multiple of the vector
+    width so loads coalesce into full registers (TPU: (8,128) tiles);
+    (ii) both matmul operands + accumulator fit the scratch budget;
+    (iii) contraction dims multiples of the compute unit so the matmul
+    engine (MXU / tensor core) is fully occupied.
     """
-    mxu = options.mxu_dim
-    bm = min(_round_up(m, options.sublane_width), 512)
-    bn = min(_round_up(n, options.lane_width), 512)
-    bk = min(_round_up(k, options.lane_width), 2048)
-    # shrink until the working set fits VMEM:  bm*bk + bk*bn + bm*bn (f32 acc)
+    unit = hier.compute_unit
+    bm = min(_round_up(m, hier.team_width), 64 * hier.team_width)
+    bn = min(_round_up(n, hier.vector_width), 4 * hier.vector_width)
+    bk = min(_round_up(k, hier.vector_width), 16 * hier.vector_width)
+    # shrink until the working set fits scratch: bm*bk + bk*bn + bm*bn (f32)
     def footprint(bm, bn, bk):
         return (bm * bk + bk * bn) * itemsize + bm * bn * 4
-    while footprint(bm, bn, bk) > options.vmem_limit_bytes // 2:
-        if bk > mxu:
+    while footprint(bm, bn, bk) > hier.scratch_bytes // 2:
+        if bk > unit:
             bk //= 2
-        elif bm >= bn and bm > options.sublane_width:
+        elif bm >= bn and bm > hier.team_width:
             bm //= 2
-        elif bn > options.lane_width:
+        elif bn > hier.vector_width:
             bn //= 2
         else:
             break
     return {"bm": bm, "bn": bn, "bk": bk}
 
 
-def choose_spmv_tiling(n_rows: int, nnz_mean: float,
-                       options: CompileOptions) -> dict:
+def choose_spmv_tiling(n_rows: int, nnz_mean: float, hier) -> dict:
     """The paper's CSR heuristic (§4.2): vector length = ceil(avg nnz/row),
     clamped to the hardware vector width.  On GPU that clamp is the warp
-    size (32); on TPU it is the 128-wide lane unit, and the "vector loop"
-    becomes the padded per-row width of an ELL-style row block."""
+    size (32); on TPU the 128-wide lane unit — either way it is
+    ``hier.vector_width``, and the "vector loop" becomes the padded
+    per-row width of an ELL-style row block."""
     vec = int(math.ceil(max(nnz_mean, 1.0)))
     vec = _round_up(vec, 8)
-    vec = min(vec, options.lane_width * 4)         # clamp (paper: warp 32)
+    vec = min(vec, hier.vector_width * 4)          # clamp (paper: warp 32)
     rows_per_block = max(
-        options.sublane_width,
-        _round_down_pow2(options.vmem_limit_bytes // (8 * vec * 8)))
-    rows_per_block = min(rows_per_block, 1024, _round_up(n_rows, 8))
+        hier.team_width,
+        _round_down_pow2(hier.scratch_bytes // (8 * vec * 8)))
+    rows_per_block = min(rows_per_block, 8 * hier.vector_width,
+                         _round_up(n_rows, 8))
     return {"row_block": rows_per_block, "row_width": vec}
 
 
 def choose_map_blocks(shape: tuple, itemsize: int, n_operands: int,
-                      options: CompileOptions) -> dict:
-    """Block an elementwise iteration space: innermost dim → lanes (×128),
-    next → sublanes (×8), leading dims → grid steps."""
+                      hier) -> dict:
+    """Block an elementwise iteration space onto the hierarchy: innermost
+    dim → vector lanes, next → team rows, leading dims → outer steps."""
     if not shape:
         return {"block": (), "grid": ()}
+    if not hier.levels:
+        # depth-0 hierarchy (pure library record): nothing to block against
+        return {"block": tuple(shape), "grid": (1,) * len(shape)}
+    vec, team = hier.levels[-1], (hier.levels[-2] if hier.depth >= 2
+                                  else hier.levels[-1])
     block = list(shape)
-    # lane dim
-    block[-1] = min(_round_up(shape[-1], options.lane_width), 1024)
+    block[-1] = min(_round_up(shape[-1], vec.width), vec.max_extent or
+                    _round_up(shape[-1], vec.width))
     if len(shape) >= 2:
-        block[-2] = min(_round_up(shape[-2], options.sublane_width), 512)
-    budget = options.vmem_limit_bytes // max(2 * n_operands, 2)
+        block[-2] = min(_round_up(shape[-2], team.width), team.max_extent or
+                        _round_up(shape[-2], team.width))
+    budget = hier.scratch_bytes // max(2 * n_operands, 2)
     def fp():
         return int(np.prod(block)) * itemsize
-    # collapse leading dims into grid until it fits
+    # collapse leading dims into outer steps until it fits
     i = 0
     while fp() > budget and i < len(block):
         block[i] = 1
         i += 1
-    while fp() > budget and len(shape) >= 2 and block[-2] > 8:
+    while fp() > budget and len(shape) >= 2 and block[-2] > team.width:
         block[-2] //= 2
     grid = tuple(-(-s // b) for s, b in zip(shape, block))
     return {"block": tuple(block), "grid": grid}
 
 
 @register_pass()
-def tile_mapping(graph: Graph,
-                 options: Optional[CompileOptions] = None) -> int:
-    """Annotate ``kk.*`` ops with heuristic tiling attrs and convert
-    ``loops.parallel`` nests into ``tpu.grid_parallel`` ops.
+def map_parallelism(graph: Graph,
+                    options: Optional[CompileOptions] = None) -> int:
+    """Bind logical parallelism to the backend's declared hierarchy — the
+    kokkos-loop-mapping pass, made a pure function of the
+    :class:`~repro.core.backend.ParallelHierarchy` record.
 
-    This is the kokkos-loop-mapping pass: the nesting-depth→policy decision
-    table (1→range, 2→thread+vector, ≥3→team+thread+vector) becomes the
-    grid/block/lane level map, and the team-size/vector-length heuristics
-    become block-shape choices recorded in ``attrs["tiling"]``.
+    * ``kk.gemm`` / ``kk.batched_gemm`` get heuristic block shapes
+      (``attrs["tiling"]``) and the hierarchy's physical level names.
+    * logical ``kokkos.range_parallel`` / ``kokkos.team_parallel`` nests
+      get an ``exec_space``, a logical→physical ``level_map``
+      (league/team/vector → e.g. grid/block/lane), and block shapes; on
+      backends without the ``loop-nests`` capability the nest is instead
+      *collapsed* — marked to execute as a single fused library call
+      (``level_map=("fused",)``), the paper's library-interception path.
+    * ``kk.spmv`` / ``kk.spmm`` carry tiling + level maps from the
+      sparsify pass (their only producer) — nothing to do here.
+
+    Supporting a new architecture is therefore declaring a hierarchy on
+    its Backend record; this pass is never edited per target.
     """
     options = options or current_options()
+    hier = options.resolve_hierarchy()
+    loop_nests = options.backend().has_capability("loop-nests")
     mapped = 0
     for op in list(graph.ops):
         if op.opname == "kk.gemm":
@@ -390,61 +441,69 @@ def tile_mapping(graph: Graph,
             n = b.type.shape[1]
             itemsize = dtype_itemsize(a.type.dtype)
             op.attrs["tiling"] = choose_matmul_blocks(m, n, k, itemsize,
-                                                      options)
-            op.attrs["level_map"] = ("grid", "block", "lane")
+                                                      hier)
+            op.attrs["exec_space"] = hier.exec_space
+            op.attrs["level_map"] = hier.map_levels(
+                ("league", "team", "vector"))
             mapped += 1
         elif op.opname == "kk.batched_gemm":
             a, b = op.operands
             *batch, m, k = a.type.shape
             n = b.type.shape[-1]
             itemsize = dtype_itemsize(a.type.dtype)
-            t = choose_matmul_blocks(m, n, k, itemsize, options)
+            t = choose_matmul_blocks(m, n, k, itemsize, hier)
             # paper §6: for small matrices vectorize the *batch* dimension
-            small = m * n <= options.mxu_dim ** 2 // 4
+            small = m * n <= hier.compute_unit ** 2 // 4
             t["batch_block"] = (
-                min(int(np.prod(batch)), options.sublane_width * 4)
+                min(int(np.prod(batch)), hier.team_width * 4)
                 if small else 1)
             t["vectorize_batch"] = small
             op.attrs["tiling"] = t
-            op.attrs["level_map"] = ("grid(batch)", "block", "lane")
+            op.attrs["exec_space"] = hier.exec_space
+            op.attrs["level_map"] = hier.map_levels(
+                ("league(batch)", "team", "vector"))
             mapped += 1
-        # kk.spmv / kk.spmm carry tiling from the sparsify pass (their
-        # only producer) — no mapping needed here
-        elif op.opname == "loops.parallel":
+        elif op.opname in KOKKOS_PARALLEL_OPS:
+            nest = op.attrs.get("nest", ())
+            if not loop_nests:
+                # library backends: collapse the nest to one fused
+                # kk.*-style call — the vendor library owns the mapping
+                op.attrs["exec_space"] = hier.exec_space
+                op.attrs["level_map"] = ("fused",) * max(len(nest), 1)
+                op.attrs["collapse"] = True
+                mapped += 1
+                continue
             shape = op.attrs["iter_space"]
             itemsize = dtype_itemsize(op.results[0].type.dtype)
-            tiling = choose_map_blocks(shape, itemsize,
-                                       len(op.operands) + 1, options)
-            depth = len(shape)
-            level_map = (["grid"] * max(depth - 2, 0)
-                         + ["sublane", "lane"][max(2 - depth, 0):])
-            new = Op("tpu.grid_parallel", op.operands,
-                     [r.type for r in op.results],
-                     attrs={**op.attrs, "tiling": tiling,
-                            "level_map": tuple(level_map)})
-            graph.replace_op(op, [new], dict(zip(op.results, new.results)))
+            op.attrs["tiling"] = choose_map_blocks(
+                shape, itemsize, len(op.operands) + 1, hier)
+            op.attrs["exec_space"] = hier.exec_space
+            op.attrs["level_map"] = hier.map_levels(
+                tuple(lv.name for lv in nest))
             mapped += 1
     return mapped
 
 
 # ---------------------------------------------------------------------------
-# 6. kokkos-dualview-management
+# 6. kokkos-dualview-management → memory_space_management
 # ---------------------------------------------------------------------------
 
-_DEVICE_COMPUTE = {"kk", "tpu", "loops", "linalg", "tensor"}
-
-
 @register_pass()
-def dualview_management(graph: Graph,
-                        options: Optional[CompileOptions] = None) -> int:
-    """Assign memory spaces and insert lazy sync/modify ops (paper §4.3).
+def memory_space_management(graph: Graph,
+                            options: Optional[CompileOptions] = None
+                            ) -> int:
+    """Assign a memory space to every value and insert the lazy
+    ``kokkos.sync`` / ``kokkos.modify`` coherence ops (paper §4.3) — the
+    DualView insertion folded into the same space framework the parallel
+    dialect uses: spaces are type attrs, coherence is IR-visible ops, and
+    "device" means the resolved hierarchy's exec space, not TPU.
 
     * graph inputs/outputs: DEVICE (they arrive as jax.Arrays);
     * ``tensor.constant``: DUAL — host-resident weights mirrored to device
       on first use (the paper's weights-embedded-in-source story);
-    * before the first device-compute use of a DUAL value: ``tpu.sync
-      {Device}`` (lazy: runtime checks the modified flag);
-    * after any op writing a DUAL value: ``tpu.modify {Device}``.
+    * before the first compute use of a DUAL value: ``kokkos.sync
+      {exec_space}`` (lazy: runtime checks the modified flag);
+    * after any op writing a DUAL value: ``kokkos.modify {exec_space}``.
 
     With ``options.lazy_dualview == False`` we emulate baseline-MLIR
     behaviour instead (paper: sparse-gpu-codegen): *eager* copies around
@@ -452,6 +511,7 @@ def dualview_management(graph: Graph,
     win on multi-kernel programs (e.g. per-layer copies in ResNet).
     """
     options = options or current_options()
+    exec_space = options.resolve_hierarchy().exec_space
     inserted = 0
     for v in graph.inputs:
         if v.type.memory_space is MemorySpace.ANY:
@@ -469,8 +529,8 @@ def dualview_management(graph: Graph,
                 need = options.lazy_dualview and operand.id not in synced
                 need = need or not options.lazy_dualview  # eager: every use
                 if need:
-                    new_ops.append(Op("tpu.sync", [operand], [],
-                                      attrs={"space": "device",
+                    new_ops.append(Op("kokkos.sync", [operand], [],
+                                      attrs={"space": exec_space,
                                              "lazy": options.lazy_dualview}))
                     synced.add(operand.id)
                     inserted += 1
@@ -483,7 +543,7 @@ def dualview_management(graph: Graph,
             # baseline-MLIR emulation (paper §4.3, sparse-gpu-codegen):
             # every kernel's outputs are eagerly copied back to host
             for res in op.results:
-                new_ops.append(Op("tpu.sync", [res], [],
+                new_ops.append(Op("kokkos.sync", [res], [],
                                   attrs={"space": "host_roundtrip",
                                          "lazy": False}))
                 inserted += 1

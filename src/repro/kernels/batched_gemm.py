@@ -10,7 +10,7 @@ block so the (8,128) vector unit and MXU stay occupied:
 * large matrices: fall back to per-matrix MXU tiling (batch_block = 1,
   grid also over M/N/K tiles).
 
-The choice is the tile-mapping heuristic (``vectorize_batch``).
+The choice is the map_parallelism heuristic (``vectorize_batch``).
 """
 from __future__ import annotations
 

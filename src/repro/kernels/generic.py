@@ -1,10 +1,12 @@
-"""Generic blocked map kernel — materializes ``tpu.grid_parallel`` ops.
+"""Generic blocked map kernel — materializes mapped ``kokkos.*_parallel``
+nests on the Pallas path.
 
-The tile-mapping pass turns a dense loop nest into grid/block/lane levels;
-this kernel executes the nest body (``fn``, the op's reference semantics)
-on VMEM blocks.  Equivalent of LAPIS emitting a Kokkos parallel_for whose
-body is the scalarized linalg op — here the body is vectorized over the
-block instead of scalarized (TPU has no scalar loop level worth using).
+The map_parallelism pass binds a logical league/team/vector nest onto the
+backend's declared hierarchy (grid/block/lane here); this kernel executes
+the nest body (``fn``, the op's reference semantics) on VMEM blocks.
+Equivalent of LAPIS emitting a Kokkos parallel_for whose body is the
+scalarized linalg op — here the body is vectorized over the block instead
+of scalarized (TPU has no scalar loop level worth using).
 """
 from __future__ import annotations
 

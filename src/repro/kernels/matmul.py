@@ -3,7 +3,7 @@
 Pallas grid = (M/bm, N/bn, K/bk); the K axis is an ``arbitrary`` revisiting
 dimension accumulating into an f32 VMEM scratch tile (HBM→VMEM→VREG: operand
 tiles stream through VMEM, the accumulator lives in VMEM for the whole K
-sweep).  Block shapes come from the tile-mapping pass's heuristics
+sweep).  Block shapes come from the map_parallelism pass's heuristics
 (``choose_matmul_blocks``) — the TeamPolicy team-size/vector-length analogue.
 """
 from __future__ import annotations

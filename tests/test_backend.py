@@ -9,7 +9,7 @@ import pytest
 
 from repro.core import backend as backend_mod
 from repro.core import ops, passes, pipeline, registry, tracer
-from repro.core.backend import (Backend, TENSOR_PIPELINE, register_backend,
+from repro.core.backend import (Backend, DEFAULT_PIPELINE, register_backend,
                                 register_kernel)
 from repro.core.options import CompileOptions, use_options
 from repro.core.passmgr import (IRVerificationError, PassManager,
@@ -53,7 +53,7 @@ def test_registration_is_idempotent():
 def test_plugin_backend_fallback_order():
     calls = []
     register_backend(Backend(name="dummy-test", fallbacks=("xla",),
-                             pipeline=TENSOR_PIPELINE))
+                             pipeline=DEFAULT_PIPELINE))
     register_kernel("kk.gemm", "dummy-test",
                     lambda a, b, tiling=None: calls.append("hit") or a @ b)
     opts = CompileOptions(target="dummy-test")
@@ -105,23 +105,28 @@ def test_select_target_parity_auto_interpret_prefers_library_ops():
 
 
 # ---------------------------------------------------------------------------
-# per-backend pipeline composition
+# per-backend parallelism mapping (one pipeline, per-backend hierarchies)
 # ---------------------------------------------------------------------------
 
-def test_pipeline_composition_library_vs_loop_backends():
-    assert "linalg_to_loops" not in backend_mod.get_backend("xla").pipeline
-    assert "linalg_to_loops" in backend_mod.get_backend("pallas").pipeline
-    assert "linalg_to_loops" in backend_mod.get_backend("loops").pipeline
+def test_unified_pipeline_mapping_library_vs_loop_backends():
+    # every backend runs the same pass pipeline; the divergence is the
+    # declared ParallelHierarchy that map_parallelism consults
+    for name in ("xla", "pallas", "loops"):
+        assert backend_mod.get_backend(name).pipeline == DEFAULT_PIPELINE
 
     g = _trace(lambda x: ops.relu(x), (64, 256))
     with use_options(CompileOptions(target="xla")) as o:
         passes.run_pipeline(g, o)
-    assert all(op.opname != "tpu.grid_parallel" for op in g.ops)
+    (nest,) = [op for op in g.ops if op.opname == "kokkos.team_parallel"]
+    assert nest.attrs["collapse"]          # library: one fused call
 
     g2 = _trace(lambda x: ops.relu(x), (64, 256))
     with use_options(CompileOptions(target="loops")) as o:
         passes.run_pipeline(g2, o)
-    assert any(op.opname == "tpu.grid_parallel" for op in g2.ops)
+    (nest2,) = [op for op in g2.ops if op.opname == "kokkos.team_parallel"]
+    assert not nest2.attrs.get("collapse")
+    assert nest2.attrs["exec_space"] == "host"
+    assert nest2.attrs["level_map"] == ("serial-block", "jnp-vector")
 
 
 # ---------------------------------------------------------------------------

@@ -72,7 +72,7 @@ def test_pallas_target_executable(rng):
                                       prefer_library=False,
                                       fuse_elementwise=False))
     names = [op.opname for op in mod.graph.ops]
-    assert "tpu.grid_parallel" in names
+    assert "kokkos.team_parallel" in names
     np.testing.assert_allclose(np.asarray(mod(x)), ref(x), rtol=1e-4,
                                atol=1e-4)
 

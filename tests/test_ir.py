@@ -20,7 +20,8 @@ def test_types():
     assert "2x3xfloat32" in str(t)
     assert "#dual" in str(t)
     assert t.nbytes == 24
-    assert t.with_space(MemorySpace.VMEM).memory_space is MemorySpace.VMEM
+    assert t.with_space(MemorySpace.SCRATCH).memory_space is \
+        MemorySpace.SCRATCH
 
 
 def test_walk_and_users():
@@ -44,7 +45,7 @@ def test_dce_removes_dead_keeps_side_effects():
     g, a, b, add, mul = _g()
     t = add.results[0].type
     dead = g.add(Op("linalg.neg", [a], [t]))
-    sync = g.add(Op("tpu.sync", [a], []))
+    sync = g.add(Op("kokkos.sync", [a], []))
     removed = g.dce()
     assert removed == 1
     assert dead not in g.ops and sync in g.ops
