@@ -1,0 +1,148 @@
+"""Fusion benchmark — kernel-launch count + wall time, fused vs unfused.
+
+Measures what the ``kokkos.fused`` region buys on the hot path: a chain
+of N elementwise ops compiles to ONE mapped nest/kernel instead of N
+per-op dispatches.  Two workloads:
+
+  mlp    — the pipeline CLI's mlp demo (matmul + bias→activation chain);
+  chain  — a deep pure-elementwise chain, the fusion stress case.
+
+Per backend (``--targets``) and per workload we compile the same graph
+with ``fuse_elementwise`` on and off and record:
+
+  launches     — static kernel-launch count (``CompiledModule.launch_count``:
+                 one per bound executor; a fused region counts ONE);
+  wall_us      — wall time of the jitted callable (the paper's A.2
+                 protocol; the headline number);
+  dispatch_us  — wall time of the emitter's own executor loop
+                 (``build_callable`` unjitted) — the per-op dispatch
+                 overhead fusion eliminates.
+
+Times are min-of-rounds of mean-over-reps (the low-noise estimator).
+``--out BENCH_fusion.json`` writes the full record for the perf
+trajectory; the CI bench-smoke job uploads it as an artifact.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.fusion_bench --targets xla,loops \
+        --out BENCH_fusion.json
+    PYTHONPATH=src python -m benchmarks.fusion_bench --smoke
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _paired_min_time(fns: dict, args: tuple, reps: int,
+                     rounds: int) -> dict:
+    """Seconds per call for each fn: min over ``rounds`` of the mean over
+    ``reps``, with the candidates' rounds interleaved so slow-host drift
+    hits both sides equally (one untimed warm-up each)."""
+    import jax
+    for fn in fns.values():
+        jax.block_until_ready(fn(*args))
+    best = {k: float("inf") for k in fns}
+    for _ in range(rounds):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best[k] = min(best[k], (time.perf_counter() - t0) / reps)
+    return best
+
+
+def _chain_workload(rng, depth: int, shape: tuple):
+    from repro.core import ops
+    cycle = (ops.tanh, ops.sigmoid, ops.neg, ops.relu)
+
+    def fn(x):
+        h = x
+        for i in range(depth):
+            h = cycle[i % len(cycle)](h)
+        return h
+
+    x = rng.standard_normal(shape).astype(np.float32)
+    return fn, (x,)
+
+
+def _workloads(rng, smoke: bool):
+    from repro.core.pipeline import _demo_mlp
+    mlp_fn, _, mlp_example = _demo_mlp()
+    if smoke:
+        chain = _chain_workload(rng, depth=8, shape=(64, 128))
+    else:
+        chain = _chain_workload(rng, depth=12, shape=(256, 512))
+    return (("mlp", mlp_fn, mlp_example), ("chain",) + chain)
+
+
+def _measure_pair(fn, example, target, reps, rounds):
+    """Compile fused + unfused and time them with interleaved rounds."""
+    from repro.core import pipeline
+    from repro.core.options import CompileOptions
+    mods = {variant: pipeline.compile(fn, *example, options=CompileOptions(
+                target=target, fuse_elementwise=(variant == "fused")))
+            for variant in ("fused", "unfused")}
+    # unjitted first: it seeds the DualView weight caches with concrete
+    # arrays (running the jit trace first would cache tracers instead)
+    dispatch = _paired_min_time(
+        {k: m.forward.unjitted for k, m in mods.items()}, example,
+        reps, rounds)
+    wall = _paired_min_time(mods, example, reps, rounds)
+    return {variant: {"launches": mods[variant].launch_count,
+                      "wall_us": wall[variant] * 1e6,
+                      "dispatch_us": dispatch[variant] * 1e6}
+            for variant in mods}
+
+
+def main(print_rows=True, targets=None, smoke=False, out=None):
+    from repro.core.options import current_options
+
+    if targets is None:
+        targets = [current_options().target]
+    # many short interleaved rounds: min-of-round-means converges to the
+    # noise floor for both variants even on busy hosts
+    reps, rounds = (50, 4) if smoke else (100, 20)
+    rng = np.random.default_rng(0)
+    rows, record = [], {"bench": "fusion", "smoke": bool(smoke),
+                        "workloads": {}}
+    for name, fn, example in _workloads(rng, smoke):
+        wl = record["workloads"].setdefault(name, {})
+        for target in targets:
+            pair = _measure_pair(fn, example, target, reps, rounds)
+            fused, unfused = pair["fused"], pair["unfused"]
+            wl[target] = pair
+            rows.append(row(
+                f"fusion/{name}/{target}/fused", fused["wall_us"],
+                f"launches={fused['launches']} "
+                f"dispatch_us={fused['dispatch_us']:.1f}"))
+            rows.append(row(
+                f"fusion/{name}/{target}/unfused",
+                unfused["wall_us"],
+                f"launches={unfused['launches']} "
+                f"dispatch_us={unfused['dispatch_us']:.1f}"))
+    if print_rows:
+        print("\n".join(rows))
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        if print_rows:
+            print(f"# wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    p = argparse.ArgumentParser()
+    p.add_argument("--targets", default="xla,loops",
+                   help="comma list of backend names")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--out", default=None,
+                   help="write BENCH_fusion.json-style record here")
+    args = p.parse_args()
+    main(targets=args.targets.split(","), smoke=args.smoke, out=args.out)

@@ -25,10 +25,10 @@ def main(print_rows=True, smoke=False):
     from repro.models.resnet import init_resnet18_weights, resnet18_forward
 
     # derive from the ambient options so `benchmarks.run --targets ...`
-    # really benchmarks this section per backend
+    # really benchmarks this section per backend (fusion stays on — the
+    # residual add→relu chains run as single kokkos.fused nests)
     def opts(**overrides):
-        return dataclasses.replace(current_options(),
-                                   fuse_elementwise=False, **overrides)
+        return dataclasses.replace(current_options(), **overrides)
 
     batch, res = (2, 32) if smoke else (BATCH, RES)
     rng = np.random.default_rng(0)

@@ -21,7 +21,8 @@ import sys
 def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
-                   help="comma list: gemm,spmv,bgemm,mala,resnet,roofline")
+                   help="comma list: "
+                        "gemm,fusion,spmv,bgemm,mala,resnet,roofline")
     p.add_argument("--targets", default=None,
                    help="comma list of backend names to benchmark side by "
                         "side (default: the ambient target)")
@@ -49,8 +50,8 @@ def main(argv=None) -> int:
             except backend_mod.UnknownBackendError as e:
                 p.error(str(e))
 
-    from benchmarks import (batched_gemm_bench, gemm_bench, mala_bench,
-                            resnet_bench, spmv_bench)
+    from benchmarks import (batched_gemm_bench, fusion_bench, gemm_bench,
+                            mala_bench, resnet_bench, spmv_bench)
     from benchmarks import roofline as roofline_bench
 
     # last column: section goes through pipeline.compile and honors the
@@ -59,6 +60,8 @@ def main(argv=None) -> int:
     # the sparse pipeline per backend since PR 2)
     sections = [
         ("gemm", "Table 6.2 — SGEMM zero-overhead", gemm_bench.main, True),
+        ("fusion", "kokkos.fused — launch count + wall, fused vs unfused",
+         fusion_bench.main, True),
         ("spmv", "Fig 6.1 — SpMV, 4 matrices", spmv_bench.main, True),
         ("bgemm", "Fig 6.3 — batched GEMM", batched_gemm_bench.main, False),
         ("mala", "Fig 6.2a — MALA DNN inference", mala_bench.main, True),

@@ -15,20 +15,25 @@ from repro.core.options import CompileOptions
 
 rng = np.random.default_rng(0)
 w1 = rng.standard_normal((64, 256), dtype=np.float32) * 0.05
+b1 = rng.standard_normal((8, 256), dtype=np.float32) * 0.05
 w2 = rng.standard_normal((256, 10), dtype=np.float32) * 0.05
 
 
 def model(x):
-    h = ops.gelu(ops.matmul(x, ops.constant(w1)))
+    # the bias→gelu chain fuses into one kokkos.fused region — visible
+    # in the IR below, executed as a single kernel, and still emittable
+    # as freestanding source (the fused body is IR data, not a closure)
+    h = ops.gelu(ops.add(ops.matmul(x, ops.constant(w1)),
+                         ops.constant(b1)))
     return ops.softmax(ops.matmul(h, ops.constant(w2)))
 
 
 def main():
     x = rng.standard_normal((8, 64)).astype(np.float32)
 
-    # 1. compile (trace → lapis-opt → lapis-translate)
-    mod = pipeline.compile(model, x,
-                           options=CompileOptions(fuse_elementwise=False))
+    # 1. compile (trace → lapis-opt → lapis-translate); fusion stays on —
+    # the source path is total on fused graphs
+    mod = pipeline.compile(model, x, options=CompileOptions())
     print("=== lowered IR ===")
     print(mod.print_ir())
 

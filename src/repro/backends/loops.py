@@ -94,8 +94,12 @@ def batched_gemm_loops(a, b, *, tiling=None):
 def _parallel_nest_loops(op, options):
     """Interpret a mapped ``kokkos.range_parallel``/``kokkos.team_parallel``
     nest as a Python serial loop over row blocks with the op's jnp body
-    applied per tile."""
-    fn = op.attrs["fn"]
+    applied per tile.  A nest lowered from a ``kokkos.fused`` region runs
+    the whole recorded sub-op chain inside each tile — the serial-nest
+    equivalent of the single-kernel fused launch."""
+    from repro.core import refs
+    fn = (refs.region_ref(op.regions[0]) if op.regions
+          else op.attrs["fn"])
     kind = op.attrs["kind"]
     shape = op.results[0].type.shape
     block = (op.attrs.get("tiling") or {}).get("block", shape)
@@ -123,6 +127,11 @@ def _parallel_nest_loops(op, options):
 def _loops_executor(op, options):
     if op.opname in ("kokkos.range_parallel", "kokkos.team_parallel"):
         return _parallel_nest_loops(op, options)
+    if op.opname == "kokkos.fused":
+        # an unlowered fused region (mixed operand shapes): one composed
+        # serial evaluation of the recorded chain
+        from repro.core import refs
+        return refs.region_ref(op.regions[0])
     return None
 
 

@@ -43,21 +43,24 @@ from repro.core.options import CompileOptions, current_options
 
 def _parallel_callable(op: Op, options: CompileOptions) -> Callable:
     """Materialize a mapped kokkos.*_parallel nest as a Pallas call
-    (map/reduce kernels are generic; the fn from the IR runs on blocks
-    shaped by the backend's hierarchy)."""
+    (map/reduce kernels are generic; the body from the IR runs on blocks
+    shaped by the backend's hierarchy).  A nest carrying a fused region
+    executes the whole multi-op body inside ONE kernel — intermediates
+    never leave scratch (``generic.block_map_region``)."""
     from repro.kernels import generic
     kind = op.attrs["kind"]
     tiling = op.attrs["tiling"]
-    fn = op.attrs["fn"]
     interpret = options.resolve_interpret()
     out_shape = op.results[0].type.shape
     out_dtype = op.results[0].type.dtype
-    if kind == "map":
-        return lambda *a: generic.block_map(
-            fn, a, out_shape, out_dtype,
+    if op.regions:
+        region = op.regions[0]
+        return lambda *a: generic.block_map_region(
+            region, a, out_shape, out_dtype,
             block=tiling["block"], interpret=interpret)
-    if kind == "reduce":
-        return lambda *a: generic.block_map(  # softmax/axis-reduce on blocks
+    fn = op.attrs["fn"]
+    if kind in ("map", "reduce"):  # softmax/axis-reduce also runs on blocks
+        return lambda *a: generic.block_map(
             fn, a, out_shape, out_dtype,
             block=tiling["block"], interpret=interpret)
     raise NotImplementedError(kind)
@@ -81,8 +84,10 @@ def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
         from repro.kernels.spmv import as_ell
         mx = op.attrs.get("max_nnz_row")
         return lambda a, _mx=mx: as_ell(a, max_nnz_row=_mx)
-    if op.opname == "kk.fused_elementwise":
-        return op.attrs["fn"]  # XLA fuses the composed closure
+    if op.opname == "kokkos.fused":
+        # an unlowered fused region (e.g. mixed operand shapes kept it at
+        # tensor level): interpret the structured body; XLA fuses the jnp
+        return refs.region_ref(op.regions[0])
     if op.opname.startswith("kk."):
         tiling = op.attrs.get("tiling")
         fn = registry.dispatch(op.opname, options)
@@ -187,8 +192,15 @@ def build_callable(graph: Graph,
             outs.append(v.device() if isinstance(v, DualView) else v)
         return outs[0] if len(outs) == 1 else tuple(outs)
 
+    # kernel-launch count: one dispatch per bound executor (constants and
+    # sync/modify bookkeeping are not launches).  A fused chain of N
+    # elementwise ops contributes ONE — the launch-count bench and the
+    # fusion acceptance test read this.
+    launch_count = sum(1 for _, ex in executors if ex is not None)
+
     run.const_views = const_views
     run.graph = graph
+    run.launch_count = launch_count
     if jit:
         jitted = jax.jit(run)
 
@@ -197,6 +209,7 @@ def build_callable(graph: Graph,
         wrapper.const_views = const_views
         wrapper.graph = graph
         wrapper.unjitted = run
+        wrapper.launch_count = launch_count
         return wrapper
     return run
 
@@ -293,14 +306,27 @@ def _src_line(op: Op, names: dict) -> str:
         return (f"{res} = jax.lax.reduce_window({a[0]}, -jnp.inf, "
                 f"jax.lax.max, {(1, 1) + tuple(at['window'])!r}, "
                 f"{(1, 1) + tuple(at['stride'])!r}, {at['padding']!r})")
-    if op.opname == "kk.fused_elementwise":
-        # re-expand: fused python closures can't be serialized — emit the
-        # original chain recorded in attrs["ops"] is not enough to rebuild
-        # arg routing, so fused graphs should be emitted pre-fusion.
-        raise ValueError(
-            "emit_python_source requires fuse_elementwise=False "
-            "(fused closures are not serializable)")
     raise NotImplementedError(f"source emission for {op.opname}")
+
+
+def _fused_region_lines(op: Op, names: dict, fresh: Callable) -> list:
+    """Serialize a ``kokkos.fused`` region (or a parallel nest lowered
+    from one) by re-emitting its recorded sub-op chain: block args bind
+    to the outer operands' names, each sub-op becomes an ordinary source
+    line, and the op's result takes the yielded value's name.  The body
+    is IR data, so the source path is total on fused graphs."""
+    region = op.regions[0]
+    local = dict(zip((ba.id for ba in region.inputs),
+                     (names[o.id] for o in op.operands)))
+    lines = ["# kokkos.fused: " +
+             " -> ".join(s.opname for s in region.ops)]
+    for sub in region.ops:
+        for r in sub.results:
+            local[r.id] = fresh()
+        lines.append(_src_line(sub, local))
+    for r, out in zip(op.results, region.outputs):
+        names[r.id] = local[out.id]
+    return lines
 
 
 _PRELUDE = '''\
@@ -418,6 +444,11 @@ def emit_python_source(graph: Graph,
             space = op.attrs.get("space", "device")
             body.append(f"# {op.opname} {val} {{{space}}} — lazy h2d on "
                         "first use (weights loaded by lapis_initialize)")
+            continue
+        if op.regions:
+            # kokkos.fused — or a kokkos.*_parallel nest lowered from one:
+            # re-emit the structured sub-op chain the region records
+            body.extend(_fused_region_lines(op, names, fresh))
             continue
         for r in op.results:
             names[r.id] = fresh()

@@ -16,6 +16,11 @@ the Kokkos ecosystem") is backend-neutral: ``kokkos.range_parallel`` /
 those logical levels onto whatever physical hierarchy the backend
 declares (a :class:`~repro.core.backend.ParallelHierarchy`).  No op in
 this file knows about lanes, warps, or grids.
+
+``kokkos.fused`` is the structured fusion op: its body is a
+:class:`Region` of ordinary sub-ops (opname + attrs + SSA operand
+routing) — IR-visible data the dumper prints and the emitter serializes,
+never an opaque Python closure.
 """
 from __future__ import annotations
 
@@ -191,6 +196,34 @@ class Value:
         return self.type.dtype
 
 
+class Region:
+    """A single-block region owned by an Op (≈ an MLIR region).
+
+    ``inputs`` are the block arguments — fresh :class:`Value`\\ s that
+    correspond **positionally** to the owning op's operands (the operand
+    routing of the fused body); ``ops`` is the structured list of sub-op
+    records (each an ordinary :class:`Op` carrying opname + attrs + SSA
+    operand routing); ``outputs`` are the yielded values.  Everything in
+    a region is plain data: the IR dumper prints it (``_print_op``) and
+    the emitter serializes it — no Python closures.
+    """
+
+    __slots__ = ("inputs", "ops", "outputs")
+
+    def __init__(self, inputs: Sequence[Value],
+                 ops: Optional[list] = None,
+                 outputs: Optional[list] = None):
+        self.inputs = list(inputs)
+        self.ops: list = list(ops or [])
+        self.outputs: list = list(outputs or [])
+
+    def walk(self) -> Iterable["Op"]:
+        for op in self.ops:
+            yield op
+            for region in op.regions:
+                yield from region.walk()
+
+
 class Op:
     """An IR operation: ``results = opname(operands) {attrs}`` (+ regions)."""
 
@@ -356,9 +389,12 @@ LINALG_SHAPE = {"tensor.reshape", "tensor.transpose", "tensor.slice",
                 "tensor.concat", "tensor.broadcast", "tensor.cast",
                 "tensor.constant", "tensor.pad", "tensor.gather"}
 KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv", "kk.spmm",
-          "kk.attention", "kk.rwkv6_scan", "kk.rglru_scan", "kk.conv2d",
-          "kk.fused_elementwise"}
+          "kk.attention", "kk.rwkv6_scan", "kk.rglru_scan", "kk.conv2d"}
 # The hierarchical parallel dialect: logical nests awaiting (or carrying)
-# a per-backend level mapping, plus the memory-space coherence ops.
+# a per-backend level mapping, the IR-visible fused-elementwise region op
+# (its body is a Region of sub-op records, not a closure), plus the
+# memory-space coherence ops.
 KOKKOS_PARALLEL_OPS = {"kokkos.range_parallel", "kokkos.team_parallel"}
-KOKKOS_OPS = KOKKOS_PARALLEL_OPS | {"kokkos.sync", "kokkos.modify"}
+KOKKOS_FUSED = "kokkos.fused"
+KOKKOS_OPS = KOKKOS_PARALLEL_OPS | {KOKKOS_FUSED, "kokkos.sync",
+                                    "kokkos.modify"}

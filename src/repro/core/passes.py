@@ -2,7 +2,10 @@
 
 Pass order (mirrors the paper's pipeline; one pipeline for every backend):
 
-1. ``fuse_elementwise``          [beyond paper] chain-fuse elementwise ops.
+1. ``fuse_elementwise``          [beyond paper] chain-fuse elementwise ops
+                                 into IR-visible ``kokkos.fused`` region
+                                 ops (structured sub-op bodies, no
+                                 closures) later lowered to ONE nest.
 2. ``sparsify``                  [sparse-compiler-kokkos] pick the storage
                                  layout for sparse-encoded operands (CSR→ELL
                                  ``sparse.convert`` when the backend wants
@@ -41,7 +44,7 @@ from repro.core import refs
 from repro.core.ir import (Graph, KOKKOS_PARALLEL_OPS, LINALG_ELEMENTWISE,
                            LINALG_MATMUL_LIKE, LINALG_REDUCTION,
                            LINALG_SPARSE, LoopLevel, MemorySpace, Op,
-                           TensorType, dtype_itemsize)
+                           Region, TensorType, Value, dtype_itemsize)
 from repro.core.options import CompileOptions, current_options
 from repro.core.passmgr import PassManager, register_pass
 
@@ -49,7 +52,7 @@ from repro.core.passmgr import PassManager, register_pass
 # 1. elementwise fusion (beyond paper — XLA-style producer/consumer fusion)
 # ---------------------------------------------------------------------------
 
-_FUSABLE = LINALG_ELEMENTWISE | {"kk.fused_elementwise"}
+_FUSABLE = LINALG_ELEMENTWISE | {"kokkos.fused"}
 
 
 @register_pass()
@@ -116,24 +119,47 @@ def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
     return fused
 
 
+def _fusion_body(op: Op) -> tuple:
+    """``op`` as a fusion body: ``(block_args, sub_ops, out_value)``.
+
+    A ``kokkos.fused`` op contributes its existing region (the op itself
+    is discarded by the caller, so reusing its inner ops is safe); a
+    plain elementwise op becomes a one-op body over fresh block args
+    mirroring its operands positionally.
+    """
+    if op.opname == "kokkos.fused":
+        r = op.regions[0]
+        return list(r.inputs), list(r.ops), r.outputs[0]
+    args = [Value(o.type) for o in op.operands]
+    sub = Op(op.opname, args, [op.results[0].type], attrs=dict(op.attrs))
+    return args, [sub], sub.results[0]
+
+
 def _build_fused_op(producer: Op, consumer: Op, operand_idx: int) -> Op:
-    p_fn = refs.op_ref(producer.opname, producer.attrs)
-    c_fn = refs.op_ref(consumer.opname, consumer.attrs)
-    n_p = len(producer.operands)
+    """Merge producer and consumer into one ``kokkos.fused`` region op.
 
-    def fn(*args, _p=p_fn, _c=c_fn, _np=n_p, _i=operand_idx):
-        mid = _p(*args[:_np])
-        c_args = list(args[_np:])
-        c_args.insert(_i, mid)
-        return _c(*c_args)
-
+    The fused body is *data*: a Region whose block args correspond
+    positionally to the outer operands (producer's first, then the
+    consumer's minus the fused edge) and whose ops are the recorded
+    sub-op chain — printable by the IR dumper, serializable by the
+    emitter, and executable via :func:`repro.core.refs.region_ref`.
+    """
+    p_args, p_ops, p_out = _fusion_body(producer)
+    c_args, c_ops, c_out = _fusion_body(consumer)
+    # operand routing: the consumer's block arg at the fused edge becomes
+    # the producer body's yielded value
+    edge = {c_args[operand_idx].id: p_out}
+    for sub in c_ops:
+        sub.operands = [edge.get(v.id, v) for v in sub.operands]
+    region = Region(inputs=p_args + [a for j, a in enumerate(c_args)
+                                     if j != operand_idx],
+                    ops=p_ops + c_ops,
+                    outputs=[edge.get(c_out.id, c_out)])
     operands = list(producer.operands) + [
         v for j, v in enumerate(consumer.operands) if j != operand_idx]
-    return Op("kk.fused_elementwise", operands,
-              [consumer.results[0].type],
-              attrs={"fn": fn,
-                     "ops": (producer.attrs.get("ops", (producer.opname,)) +
-                             consumer.attrs.get("ops", (consumer.opname,)))})
+    return Op("kokkos.fused", operands, [consumer.results[0].type],
+              attrs={"ops": tuple(s.opname for s in region.ops)},
+              regions=[region])
 
 
 def _fuse_pair(graph: Graph, producer: Op, consumer: Op,
@@ -251,7 +277,7 @@ def linalg_to_library(graph: Graph,
 # 4. dense-linalg-to-parallel-loops (logical kokkos.* nests)
 # ---------------------------------------------------------------------------
 
-_LOOPABLE = LINALG_ELEMENTWISE | LINALG_REDUCTION | {"kk.fused_elementwise"}
+_LOOPABLE = LINALG_ELEMENTWISE | LINALG_REDUCTION | {"kokkos.fused"}
 
 
 def _logical_nest(shape: tuple) -> tuple:
@@ -306,13 +332,28 @@ def linalg_to_parallel(graph: Graph,
         nest = _logical_nest(shape)
         opname = ("kokkos.range_parallel" if len(nest) <= 1
                   else "kokkos.team_parallel")
-        fn = refs.op_ref(op.opname, op.attrs)
+        regions = []
+        if op.opname == "kokkos.fused":
+            # the whole fused region lowers to ONE logical nest: the body
+            # rides along as IR data, its executable meaning derived by
+            # region_ref, and every intermediate lives in fast per-team
+            # memory for the life of a block (one kernel, no round-trips)
+            region = op.regions[0]
+            for sub in region.ops:
+                for r in sub.results:
+                    if r is not region.outputs[0]:
+                        r.type = r.type.with_space(MemorySpace.SCRATCH)
+            regions.append(region)
+            fn = refs.region_ref(region)
+        else:
+            fn = refs.op_ref(op.opname, op.attrs)
         new = Op(opname, op.operands,
                  [r.type for r in op.results],
                  attrs={"kind": kind, "fn": fn, "src": op.opname,
                         "nest": nest, "iter_space": shape,
                         **{k: v for k, v in op.attrs.items()
-                           if k in ("axis", "keepdims")}})
+                           if k in ("axis", "keepdims", "ops")}},
+                 regions=regions)
         graph.replace_op(op, [new], dict(zip(op.results, new.results)))
         lowered += 1
     return lowered
@@ -346,16 +387,27 @@ def choose_matmul_blocks(m: int, n: int, k: int, itemsize: int,
     bm = min(_round_up(m, hier.team_width), 64 * hier.team_width)
     bn = min(_round_up(n, hier.vector_width), 4 * hier.vector_width)
     bk = min(_round_up(k, hier.vector_width), 16 * hier.vector_width)
-    # shrink until the working set fits scratch: bm*bk + bk*bn + bm*bn (f32)
+    # shrink until the working set fits scratch: bm*bk + bk*bn + bm*bn
+    # (f32 accumulator).  Shrinking must preserve the width alignment the
+    # _round_up calls above established — a plain //= 2 can leave e.g.
+    # bm=24 → 12 with team_width 8, losing the coalesced-load guarantee —
+    # so each step halves *to the next width-aligned value* and stops
+    # once a dimension is down to a single width.
     def footprint(bm, bn, bk):
         return (bm * bk + bk * bn) * itemsize + bm * bn * 4
+
+    def shrink(x, width):
+        return max(_round_up(x // 2, width), width)
     while footprint(bm, bn, bk) > hier.scratch_bytes // 2:
-        if bk > unit:
-            bk //= 2
-        elif bm >= bn and bm > hier.team_width:
-            bm //= 2
-        elif bn > hier.vector_width:
-            bn //= 2
+        nbk = shrink(bk, hier.vector_width)
+        nbm = shrink(bm, hier.team_width)
+        nbn = shrink(bn, hier.vector_width)
+        if bk > unit and nbk < bk:
+            bk = nbk
+        elif bm >= bn and nbm < bm:
+            bm = nbm
+        elif nbn < bn:
+            bn = nbn
         else:
             break
     return {"bm": bm, "bn": bn, "bk": bk}
@@ -366,10 +418,15 @@ def choose_spmv_tiling(n_rows: int, nnz_mean: float, hier) -> dict:
     clamped to the hardware vector width.  On GPU that clamp is the warp
     size (32); on TPU the 128-wide lane unit — either way it is
     ``hier.vector_width``, and the "vector loop" becomes the padded
-    per-row width of an ELL-style row block."""
+    per-row width of an ELL-style row block.  Because that width is an
+    ELL *storage* width it is always a multiple of the 8-element padding
+    unit: a hierarchy declaring a vector width below 8 still gets
+    row_width 8."""
     vec = int(math.ceil(max(nnz_mean, 1.0)))
     vec = _round_up(vec, 8)
-    vec = min(vec, hier.vector_width * 4)          # clamp (paper: warp 32)
+    # clamp to the *declared* vector width (paper: warp 32; TPU: lane
+    # 128) — no hidden 4× padding factor; the floor is the ELL 8-unit
+    vec = min(vec, max(hier.vector_width, 8))
     rows_per_block = max(
         hier.team_width,
         _round_down_pow2(hier.scratch_bytes // (8 * vec * 8)))
@@ -381,7 +438,12 @@ def choose_spmv_tiling(n_rows: int, nnz_mean: float, hier) -> dict:
 def choose_map_blocks(shape: tuple, itemsize: int, n_operands: int,
                       hier) -> dict:
     """Block an elementwise iteration space onto the hierarchy: innermost
-    dim → vector lanes, next → team rows, leading dims → outer steps."""
+    dim → vector lanes, next → team rows, leading dims → outer steps.
+
+    ``n_operands`` counts the live per-block buffers the scratch budget
+    must hold at once — the nest's operands plus its result, and for a
+    ``kokkos.fused`` region every sub-op intermediate too (they stay
+    resident in scratch for the life of the block)."""
     if not shape:
         return {"block": (), "grid": ()}
     if not hier.levels:
@@ -475,8 +537,13 @@ def map_parallelism(graph: Graph,
                 continue
             shape = op.attrs["iter_space"]
             itemsize = dtype_itemsize(op.results[0].type.dtype)
+            # live block buffers: one per operand plus one per region
+            # sub-op result (fused intermediates stay in scratch for the
+            # life of a block), or just the output for a plain nest
+            n_bufs = len(op.operands) + (len(op.regions[0].ops)
+                                         if op.regions else 1)
             op.attrs["tiling"] = choose_map_blocks(
-                shape, itemsize, len(op.operands) + 1, hier)
+                shape, itemsize, n_bufs, hier)
             op.attrs["exec_space"] = hier.exec_space
             op.attrs["level_map"] = hier.map_levels(
                 tuple(lv.name for lv in nest))

@@ -49,6 +49,12 @@ class CompiledModule:
     def print_ir(self) -> str:
         return str(self.graph)
 
+    @property
+    def launch_count(self):
+        """Static kernel-launch count of the built callable (one per
+        bound executor; a fused region counts ONE)."""
+        return getattr(self._callable, "launch_count", None)
+
 
 def lapis_opt(graph: Graph,
               options: Optional[CompileOptions] = None) -> Graph:
@@ -91,10 +97,15 @@ def _demo_mlp():
     from repro.core import ops
     rng = np.random.default_rng(0)
     w1 = rng.standard_normal((64, 128), dtype=np.float32)
+    b1 = rng.standard_normal((8, 128), dtype=np.float32)
     w2 = rng.standard_normal((128, 10), dtype=np.float32)
 
     def mlp(x):
-        h = ops.relu(ops.matmul(x, ops.constant(w1)))
+        # bias-add → relu is an elementwise chain: fuse_elementwise folds
+        # it into one kokkos.fused region (visible in the IR dump, and
+        # lowered to a single mapped nest)
+        h = ops.relu(ops.add(ops.matmul(x, ops.constant(w1)),
+                             ops.constant(b1)))
         return ops.softmax(ops.matmul(h, ops.constant(w2)))
 
     import numpy as _np
@@ -162,8 +173,9 @@ def main(argv=None) -> int:
         return 0
 
     fn, specs, example = _DEMOS[args.demo]()
+    # fusion stays on even with --emit: kokkos.fused regions are IR data
+    # the source emitter re-serializes (the source path is total)
     opts = CompileOptions(target=args.target,
-                          fuse_elementwise=args.emit is None,
                           print_ir_after_all=args.print_ir_after_all)
     mod = compile(fn, *specs, options=opts)
     if args.print_ir:

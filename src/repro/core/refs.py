@@ -1,8 +1,9 @@
 """Per-op reference semantics: opname+attrs → pure-jnp callable.
 
-Used by the fusion pass (to compose elementwise chains), by the emitter (the
-"xla" lowering of any op that was not intercepted by a library call or a
-Pallas kernel), and by tests as the oracle.
+Used by the emitter (the "xla" lowering of any op that was not intercepted
+by a library call or a Pallas kernel), by :func:`region_ref` (the
+interpreter that gives a ``kokkos.fused`` region its executable meaning),
+and by tests as the oracle.
 """
 from __future__ import annotations
 
@@ -126,8 +127,25 @@ def op_ref(opname: str, attrs: dict) -> Callable:
         return _batch_norm_ref(attrs)
     if opname == "linalg.max_pool2d":
         return _max_pool_ref(attrs)
-    if opname == "kk.fused_elementwise":
-        return attrs["fn"]
     if opname in ("linalg.map",):
         return attrs["fn"]
     raise KeyError(f"no reference semantics for {opname}")
+
+
+def region_ref(region) -> Callable:
+    """Interpret a ``kokkos.fused`` region (an ``ir.Region`` of sub-op
+    records) as one composed pure-jnp callable: arguments bind to the
+    block arguments, each sub-op runs its reference semantics over the
+    SSA environment, and the region's yield is returned.  This is the
+    executable meaning of the structured body — derived from IR data on
+    demand, so the IR itself never carries a closure."""
+    steps = [(op, op_ref(op.opname, op.attrs)) for op in region.ops]
+    input_ids = [v.id for v in region.inputs]
+    out_id = region.outputs[0].id
+
+    def fn(*args):
+        env = dict(zip(input_ids, args))
+        for op, f in steps:
+            env[op.results[0].id] = f(*[env[o.id] for o in op.operands])
+        return env[out_id]
+    return fn

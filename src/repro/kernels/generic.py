@@ -60,3 +60,23 @@ def block_map(fn: Callable, args: Sequence[jax.Array], out_shape: tuple,
     if padded != tuple(out_shape):
         out = out[tuple(slice(0, s) for s in out_shape)]
     return out
+
+
+def block_map_region(region, args: Sequence[jax.Array], out_shape: tuple,
+                     out_dtype, *, block: tuple, interpret: bool = False
+                     ) -> jax.Array:
+    """Execute a whole ``kokkos.fused`` region as ONE blocked kernel.
+
+    The multi-op body interprets the region's sub-op records over each
+    VMEM block: block arguments bind to the incoming block refs, every
+    sub-op runs its reference semantics on values that stay resident in
+    SCRATCH (VMEM) for the life of the block, and only the yielded value
+    is written out.  A chain of N fused elementwise ops therefore costs
+    one kernel launch and zero HBM round-trips for intermediates —
+    versus N launches (with N-1 materialized intermediates) unfused.
+    ``map_parallelism`` already charged the region's sub-op count against
+    ``scratch_bytes`` when it chose ``block``.
+    """
+    from repro.core import refs
+    return block_map(refs.region_ref(region), args, out_shape, out_dtype,
+                     block=block, interpret=interpret)

@@ -26,9 +26,16 @@ from repro.models.model import build_model
 
 def generate(model, params, prompts: np.ndarray, *, gen_len: int,
              max_len: int, quantized: bool = False, greedy: bool = True,
-             rng: Optional[np.random.Generator] = None) -> np.ndarray:
+             rng: Optional[np.random.Generator] = None,
+             key: Optional[jax.Array] = None) -> np.ndarray:
     """Prefill + decode ``gen_len`` tokens for a batch of equal-length
-    prompts.  Returns (B, gen_len) generated ids."""
+    prompts.  Returns (B, gen_len) generated ids.
+
+    Non-greedy decode consumes ``key`` (a JAX PRNG key), splitting a
+    fresh subkey per step — never a position-derived ``PRNGKey(length)``,
+    which would hand every request at the same position the identical
+    sample stream regardless of the serving seed.
+    """
     B, S = prompts.shape
     batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
     cfg = model.cfg
@@ -44,13 +51,16 @@ def generate(model, params, prompts: np.ndarray, *, gen_len: int,
     logits, cache = prefill(params, batch)
     out = []
     length = S
+    if key is None:
+        key = jax.random.PRNGKey(0)
     for _ in range(gen_len):
         if greedy:
             tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1) \
                 .astype(jnp.int32)
         else:
+            key, step_key = jax.random.split(key)
             tok = jax.random.categorical(
-                jax.random.PRNGKey(length),
+                step_key,
                 logits[:, :cfg.vocab_size]).astype(jnp.int32)
         out.append(np.asarray(tok))
         logits, cache = decode(params, tok, cache, jnp.int32(length))
@@ -60,10 +70,13 @@ def generate(model, params, prompts: np.ndarray, *, gen_len: int,
 
 def serve_loop(model, params, *, n_requests: int, batch: int,
                prompt_len: int, gen_len: int, quantized: bool = False,
-               seed: int = 0) -> dict:
-    """Continuous batching over a synthetic request queue."""
+               greedy: bool = True, seed: int = 0) -> dict:
+    """Continuous batching over a synthetic request queue.  The serving
+    ``seed`` roots one PRNG key; each wave decodes with its own split
+    subkey, so two waves never reuse a sample stream."""
     cfg = model.cfg
     rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
     queue: List[np.ndarray] = [
         rng.integers(1, cfg.vocab_size, prompt_len)
         for _ in range(n_requests)]
@@ -75,9 +88,10 @@ def serve_loop(model, params, *, n_requests: int, batch: int,
         queue = queue[batch:]
         prompts = np.stack(
             wave + [wave[-1]] * (batch - len(wave)))  # pad the last wave
+        key, wave_key = jax.random.split(key)
         gen = generate(model, params, prompts, gen_len=gen_len,
                        max_len=prompt_len + gen_len, quantized=quantized,
-                       rng=rng)
+                       greedy=greedy, rng=rng, key=wave_key)
         done += len(wave)
         tokens_out += gen_len * len(wave)
     dt = time.monotonic() - t0
@@ -94,13 +108,18 @@ def main(argv=None) -> int:
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen-len", type=int, default=16)
     p.add_argument("--quantized-kv", action="store_true")
+    p.add_argument("--sample", action="store_true",
+                   help="sample instead of greedy argmax decode")
+    p.add_argument("--seed", type=int, default=0,
+                   help="root PRNG seed for prompts and sampling")
     args = p.parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
     params = steps_mod.cast_compute(model.init(0), cfg.compute_dtype)
     out = serve_loop(model, params, n_requests=args.requests,
                      batch=args.batch, prompt_len=args.prompt_len,
-                     gen_len=args.gen_len, quantized=args.quantized_kv)
+                     gen_len=args.gen_len, quantized=args.quantized_kv,
+                     greedy=not args.sample, seed=args.seed)
     print(f"[serve] {out['requests']} requests, {out['tokens']} tokens, "
           f"{out['tok_per_s']:.1f} tok/s")
     return 0
