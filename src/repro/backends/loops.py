@@ -182,6 +182,8 @@ register_backend(Backend(
     hierarchy=SERIAL_HIERARCHY,
     fallbacks=("xla",),
     op_executor=_loops_executor,
+    # lapis-translate spelling: none declared — the host exec_space above
+    # already resolves to Kokkos::Serial (Backend.resolve_translate_target)
 ))
 
 register_kernel("kk.gemm", "loops", gemm_loops)

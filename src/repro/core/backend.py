@@ -133,6 +133,40 @@ class ParallelHierarchy:
                    levels=tuple(LevelSpec(**s) for s in d.get("levels", ())))
 
 
+    def summary(self) -> str:
+        """One-line human summary (``--list-backends``, docs)."""
+        def lv(s: LevelSpec) -> str:
+            bits = []
+            if s.width != 1:
+                bits.append(f"w{s.width}")
+            if s.max_extent is not None:
+                bits.append(f"<={s.max_extent}")
+            return s.name + (f"({','.join(bits)})" if bits else "")
+        levels = " -> ".join(lv(s) for s in self.levels) or "flat"
+        mib = self.scratch_bytes / 2**20
+        scratch = (f"{mib:g}MiB" if mib >= 1
+                   else f"{self.scratch_bytes // 1024}KiB")
+        return (f"{self.exec_space} | {levels} | scratch {scratch} | "
+                f"unit {self.compute_unit}")
+
+
+# ---------------------------------------------------------------------------
+# TranslateTarget — per-backend C++ spelling for lapis-translate
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TranslateTarget:
+    """How ``lapis-translate`` (:mod:`repro.core.translate`) spells this
+    backend's types and policies in emitted Kokkos C++.  A backend
+    overrides the spelling by declaring one (``Backend.translate_target``)
+    — e.g. the host-serial ``loops`` backend emits ``Kokkos::Serial``
+    nests; device backends default to ``Kokkos::DefaultExecutionSpace``
+    so the same unit retargets at Kokkos configure time."""
+
+    exec_space: str = "Kokkos::DefaultExecutionSpace"
+    layout: str = "Kokkos::LayoutRight"
+
+
 # The TPU chip geometry (v5e-shaped): grid steps over (8-sublane ×
 # 128-lane) VMEM blocks.  Declared once, shared by every backend that
 # maps onto the physical TPU (pallas directly, xla through the library).
@@ -181,6 +215,7 @@ class Backend:
     op_executor: Optional[Callable] = None   # (op, options) -> callable | None
     kernel_predicate: Optional[Callable] = None  # (options) -> bool
     passes_interpret: bool = False           # impls take an `interpret=` kwarg
+    translate_target: Optional[TranslateTarget] = None  # C++ spelling hook
 
     def ensure_loaded(self) -> None:
         """Run the deferred kernel-module import.  Loaders import modules,
@@ -231,6 +266,17 @@ class Backend:
 
     def has_capability(self, cap: str) -> bool:
         return cap in self.capabilities
+
+    def resolve_translate_target(self) -> TranslateTarget:
+        """The C++ spelling lapis-translate uses for this backend: an
+        explicit ``translate_target`` wins; otherwise host-space
+        hierarchies spell ``Kokkos::Serial`` and device hierarchies the
+        configure-time ``Kokkos::DefaultExecutionSpace``."""
+        if self.translate_target is not None:
+            return self.translate_target
+        if self.hierarchy.exec_space == "host":
+            return TranslateTarget(exec_space="Kokkos::Serial")
+        return TranslateTarget()
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import refs
 from repro.core.dualview import DualView
 from repro.core.ir import Graph, MemorySpace, Op
+from repro.core.irwalk import ValueNamer, bind_region_args, constant_label
 from repro.core.options import CompileOptions, current_options
 
 
@@ -309,20 +310,21 @@ def _src_line(op: Op, names: dict) -> str:
     raise NotImplementedError(f"source emission for {op.opname}")
 
 
-def _fused_region_lines(op: Op, names: dict, fresh: Callable) -> list:
+def _fused_region_lines(op: Op, names: ValueNamer) -> list:
     """Serialize a ``kokkos.fused`` region (or a parallel nest lowered
     from one) by re-emitting its recorded sub-op chain: block args bind
-    to the outer operands' names, each sub-op becomes an ordinary source
-    line, and the op's result takes the yielded value's name.  The body
-    is IR data, so the source path is total on fused graphs."""
+    to the outer operands' names (:func:`~repro.core.irwalk.
+    bind_region_args` — the same routing the C++ path replays), each
+    sub-op becomes an ordinary source line, and the op's result takes
+    the yielded value's name.  The body is IR data, so the source path
+    is total on fused graphs."""
     region = op.regions[0]
-    local = dict(zip((ba.id for ba in region.inputs),
-                     (names[o.id] for o in op.operands)))
+    local = bind_region_args(op, names)
     lines = ["# kokkos.fused: " +
              " -> ".join(s.opname for s in region.ops)]
     for sub in region.ops:
         for r in sub.results:
-            local[r.id] = fresh()
+            local[r.id] = names.fresh()
         lines.append(_src_line(sub, local))
     for r, out in zip(op.results, region.outputs):
         names[r.id] = local[out.id]
@@ -348,7 +350,9 @@ def _sparse_pack(indptr, indices, values, n_rows, n_cols):
 
 
 def _sparse_convert(a, max_nnz_row):
-    """CSR -> padded-ELL layout change (sparse.convert)."""
+    """CSR -> padded-ELL layout change (sparse.convert).  The width is
+    an inlined copy of repro.core.ir.ell_storage_width (this module is
+    freestanding and cannot import it)."""
     _, ip, ind, val, n_rows, n_cols = a
     width = max(-(-max(max_nnz_row, 1) // 8) * 8, 8)
     if n_rows == 0 or val.shape[0] == 0:
@@ -427,16 +431,10 @@ def emit_python_source(graph: Graph,
                        options: Optional[CompileOptions] = None) -> str:
     """Emit a freestanding Python module implementing ``graph``."""
     options = options or current_options()
-    names: dict = {}
-    for i, v in enumerate(graph.inputs):
-        names[v.id] = f"arg{i}"
+    names = ValueNamer()
+    names.bind_inputs(graph)
     consts: dict = {}
     body = []
-    n = [0]
-
-    def fresh() -> str:
-        n[0] += 1
-        return f"v{n[0]}"
 
     for op in graph.ops:
         if op.opname in ("kokkos.sync", "kokkos.modify"):
@@ -448,10 +446,10 @@ def emit_python_source(graph: Graph,
         if op.regions:
             # kokkos.fused — or a kokkos.*_parallel nest lowered from one:
             # re-emit the structured sub-op chain the region records
-            body.extend(_fused_region_lines(op, names, fresh))
+            body.extend(_fused_region_lines(op, names))
             continue
         for r in op.results:
-            names[r.id] = fresh()
+            names.bind_fresh(r)
         if op.opname == "tensor.constant":
             value = np.asarray(op.attrs["value"])
             res = names[op.results[0].id]
@@ -461,7 +459,7 @@ def emit_python_source(graph: Graph,
                 body.append(f"{res} = jnp.asarray({value.item()!r}, "
                             f"dtype=jnp.{value.dtype.name})")
             else:
-                key = f"w{len(consts)}"
+                key = constant_label(len(consts))
                 consts[key] = value
                 body.append(f"{res} = _WEIGHTS[{key!r}]")
             continue

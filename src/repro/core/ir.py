@@ -142,7 +142,7 @@ class TensorType:
         enc = self.encoding
         if enc is not None and enc.format == "ell" and \
                 enc.max_nnz_row is not None:
-            width = max(-(-max(enc.max_nnz_row, 1) // 8) * 8, 8)
+            width = ell_storage_width(enc.max_nnz_row)
             rows = self.shape[0] if self.shape else 1
             return rows * width * (itemsize + enc.crd_width // 8 + 1)
         if enc is not None and enc.nnz is not None:
@@ -153,6 +153,17 @@ class TensorType:
 
     def with_space(self, space: MemorySpace) -> "TensorType":
         return dataclasses.replace(self, memory_space=space)
+
+
+def ell_storage_width(max_nnz_row, pad_to: int = 8) -> int:
+    """Padded ELL storage width: ``max_nnz_row`` rounded up to the
+    ``pad_to`` unit, floor one unit.  THE single definition of the
+    layout's width — ``TensorType.nbytes``, the runtime conversion
+    (``kernels/spmv.csr_to_ell``) and the C++ translate stage all call
+    it, and the freestanding Python prelude in ``emitter._PRELUDE``
+    inlines the same formula (it cannot import this module)."""
+    return max(-(-max(int(max_nnz_row or 0), 1) // pad_to) * pad_to,
+               pad_to)
 
 
 def _np_dtype(dtype: str):

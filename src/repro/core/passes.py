@@ -55,7 +55,9 @@ from repro.core.passmgr import PassManager, register_pass
 _FUSABLE = LINALG_ELEMENTWISE | {"kokkos.fused"}
 
 
-@register_pass()
+@register_pass(
+    reads="single-use producer->consumer chains of linalg elementwise ops",
+    writes="kokkos.fused region ops (structured sub-op bodies)")
 def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
                      ) -> int:
     """Fuse producer→consumer chains of elementwise ops where the
@@ -183,7 +185,9 @@ _SPARSE_TO_KK = {
 }
 
 
-@register_pass()
+@register_pass(
+    reads="linalg.spmv_csr / linalg.spmm_csr over sparse-encoded operands",
+    writes="kk.spmv / kk.spmm with §4.2 tiling (+ CSR->ELL sparse.convert on ell-layout backends)")
 def sparsify(graph: Graph,
              options: Optional[CompileOptions] = None) -> int:
     """Lower linalg ops with sparse-encoded operands (paper §5: the
@@ -252,7 +256,9 @@ _TO_KK = {
 }
 
 
-@register_pass()
+@register_pass(
+    reads="linalg.matmul / linalg.batch_matmul / linalg.gemv",
+    writes="kk.gemm / kk.batched_gemm / kk.gemv library-call ops")
 def linalg_to_library(graph: Graph,
                       options: Optional[CompileOptions] = None) -> int:
     """Replace recognized linear-algebra ops with ``kk.*`` library-call ops
@@ -295,7 +301,9 @@ def _logical_nest(shape: tuple) -> tuple:
     return tuple(levels)
 
 
-@register_pass()
+@register_pass(
+    reads="remaining dense elementwise / last-axis-softmax ops and kokkos.fused regions",
+    writes="logical kokkos.range_parallel / kokkos.team_parallel nests (named LoopLevels, no hardware binding)")
 def linalg_to_parallel(graph: Graph,
                        options: Optional[CompileOptions] = None) -> int:
     """Lower remaining dense elementwise/reduction ops to *logical*
@@ -471,7 +479,9 @@ def choose_map_blocks(shape: tuple, itemsize: int, n_operands: int,
     return {"block": tuple(block), "grid": grid}
 
 
-@register_pass()
+@register_pass(
+    reads="logical kokkos.* nests and kk.gemm / kk.batched_gemm; the backend's ParallelHierarchy",
+    writes='attrs: exec_space, level_map, tiling (or collapse=True on library backends)')
 def map_parallelism(graph: Graph,
                     options: Optional[CompileOptions] = None) -> int:
     """Bind logical parallelism to the backend's declared hierarchy — the
@@ -555,7 +565,9 @@ def map_parallelism(graph: Graph,
 # 6. kokkos-dualview-management → memory_space_management
 # ---------------------------------------------------------------------------
 
-@register_pass()
+@register_pass(
+    reads="memory spaces of every SSA value",
+    writes="space type attrs; kokkos.sync / kokkos.modify coherence ops")
 def memory_space_management(graph: Graph,
                             options: Optional[CompileOptions] = None
                             ) -> int:

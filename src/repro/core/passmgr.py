@@ -27,13 +27,21 @@ class IRVerificationError(RuntimeError):
     """The graph violated SSA form after a pass."""
 
 
-def register_pass(name: Optional[str] = None):
+def register_pass(name: Optional[str] = None, *,
+                  reads: str = "", writes: str = ""):
     """Decorator registering a pass under ``name`` (default: fn name).
     Idempotent — re-registration replaces the entry, keeping re-imports
-    safe.  A pass is ``fn(graph, options) -> int`` (rewrite count)."""
+    safe.  A pass is ``fn(graph, options) -> int`` (rewrite count).
+
+    ``reads``/``writes`` are one-line IR-contract summaries (what the
+    pass consumes and produces); :func:`generate_pass_doc` renders them
+    into ``docs/passes.md``, so the reference cannot drift from the
+    registry."""
     def deco(fn: Callable) -> Callable:
         pname = name or fn.__name__
         fn.pass_name = pname
+        fn.pass_reads = reads
+        fn.pass_writes = writes
         _PASSES[pname] = fn
         return fn
     return deco
@@ -134,3 +142,98 @@ class PassManager:
         graph.pipeline_stats = stats      # name -> rewrite count (seed shape)
         graph.pass_stats = records        # rich per-pass records
         return graph
+
+
+# ---------------------------------------------------------------------------
+# pass reference generation (docs/passes.md — `--doc` subcommand)
+# ---------------------------------------------------------------------------
+
+def generate_pass_doc() -> str:
+    """Render the pass registry as the markdown reference committed at
+    ``docs/passes.md``.  Generated, never hand-edited: the docs-freshness
+    test (and CI's docs job) diff the committed file against this
+    function's output, so the reference cannot drift from the code."""
+    import inspect
+
+    from repro.core.backend import DEFAULT_PIPELINE
+
+    names = registered_passes()
+    ordered = [n for n in DEFAULT_PIPELINE if n in names]
+    extra = [n for n in names if n not in DEFAULT_PIPELINE]
+
+    lines = [
+        "# Pass reference",
+        "",
+        "<!-- AUTO-GENERATED by `python -m repro.core.passmgr --doc` — do "
+        "not edit by hand.",
+        "     Regenerate: PYTHONPATH=src python -m repro.core.passmgr "
+        "--doc > docs/passes.md",
+        "     CI's docs job fails when this file drifts from the pass "
+        "registry. -->",
+        "",
+        "Passes register by name (`repro.core.passmgr.register_pass`); a "
+        "backend's",
+        "pipeline is an ordered tuple of those names "
+        "(see [ARCHITECTURE.md](../ARCHITECTURE.md)).",
+        "The default pipeline every shipped backend runs",
+        "(`repro.core.backend.DEFAULT_PIPELINE`):",
+        "",
+        "`" + "` -> `".join(DEFAULT_PIPELINE) + "`",
+        "",
+        "| # | pass | reads | writes |",
+        "|---|------|-------|--------|",
+    ]
+    for i, n in enumerate(ordered, 1):
+        fn = _PASSES[n]
+        lines.append(f"| {i} | [`{n}`](#{n}) "
+                     f"| {fn.pass_reads or '—'} "
+                     f"| {fn.pass_writes or '—'} |")
+    for n in extra:
+        fn = _PASSES[n]
+        lines.append(f"| — | [`{n}`](#{n}) "
+                     f"| {fn.pass_reads or '—'} "
+                     f"| {fn.pass_writes or '—'} |")
+    lines.append("")
+    for n in ordered + extra:
+        fn = _PASSES[n]
+        lines.append(f"## {n}")
+        lines.append("")
+        if n in ordered:
+            lines.append(f"*Position {ordered.index(n) + 1} of "
+                         f"{len(ordered)} in `DEFAULT_PIPELINE`.*")
+        else:
+            lines.append("*Registered, but not part of "
+                         "`DEFAULT_PIPELINE`.*")
+        if fn.pass_reads or fn.pass_writes:
+            lines.append("")
+            lines.append(f"**Reads:** {fn.pass_reads or '—'}  ")
+            lines.append(f"**Writes:** {fn.pass_writes or '—'}")
+        doc = inspect.getdoc(fn)
+        if doc:
+            lines.append("")
+            lines.append(doc)
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.core.passmgr",
+        description="PassManager utilities (lapis-opt's driver)")
+    p.add_argument("--doc", action="store_true",
+                   help="print the generated pass reference "
+                        "(docs/passes.md) and exit")
+    args = p.parse_args(argv)
+    if args.doc:
+        print(generate_pass_doc(), end="")
+        return 0
+    p.print_help()
+    return 0
+
+
+if __name__ == "__main__":
+    # run through the canonical module instance: under `python -m` this
+    # file is `__main__`, but passes register into `repro.core.passmgr`
+    from repro.core.passmgr import main as _canonical_main
+    raise SystemExit(_canonical_main())

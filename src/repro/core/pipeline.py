@@ -8,6 +8,7 @@ build an executable callable and/or freestanding Python source
 CLI (the lapis-opt / lapis-translate pair)::
 
     PYTHONPATH=src python -m repro.core.pipeline --demo mlp --emit out.py
+    PYTHONPATH=src python -m repro.core.pipeline --demo mlp --emit-cpp -
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ from typing import Callable, Optional, Sequence
 import jax
 
 from repro.core import backend as backend_mod
-from repro.core import emitter, passes, tracer
+from repro.core import emitter, passes, tracer, translate
 from repro.core.ir import Graph
 from repro.core.options import CompileOptions, current_options, use_options
 
@@ -42,6 +43,17 @@ class CompiledModule:
 
     def save_source(self, path: str) -> str:
         src = self.emit_source()
+        with open(path, "w") as f:
+            f.write(src)
+        return path
+
+    def emit_cpp_source(self) -> str:
+        """Freestanding Kokkos C++ translation unit (lapis-translate —
+        the paper's C++-with-embedded-weights artifact, §4.4)."""
+        return translate.emit_cpp_source(self.graph, self.options)
+
+    def save_cpp(self, path: str) -> str:
+        src = self.emit_cpp_source()
         with open(path, "w") as f:
             f.write(src)
         return path
@@ -148,26 +160,63 @@ def _demo_spmv():
 _DEMOS = {"mlp": _demo_mlp, "spmv": _demo_spmv}
 
 
+_CLI_EPILOG = """\
+the two demos (--demo):
+  mlp    dense 2-layer MLP: matmul -> fused bias+relu region -> matmul ->
+         softmax (shows kokkos.fused, TeamPolicy nests, DualView syncs)
+  spmv   y = relu(A @ x), A a CSR sparse composite value (shows
+         sparse.pack, CSR->ELL sparse.convert on ell-layout backends,
+         the kk.spmv row-loop kernel)
+
+translation outputs:
+  --emit PATH       freestanding *Python* module, weights embedded as a
+                    base64 npz blob (runs with only jax+numpy)
+  --emit-cpp PATH   freestanding *Kokkos C++* translation unit
+                    (lapis-translate, paper §4.4): weights as constant
+                    arrays, kokkos.* ops as RangePolicy/TeamPolicy
+                    parallel_for nests, DualView syncs.  PATH '-' prints
+                    to stdout.  Syntax-check with
+                    g++ -std=c++17 -fsyntax-only -I tests/kokkos_stub
+
+examples:
+  python -m repro.core.pipeline --demo mlp --emit-cpp -
+  python -m repro.core.pipeline --demo spmv --target loops --emit-cpp out.cpp
+  python -m repro.core.pipeline --demo mlp --print-ir-after-all
+"""
+
+
 def main(argv=None) -> int:
     import argparse
-    p = argparse.ArgumentParser(description="LAPIS pipeline driver")
-    p.add_argument("--demo", default="mlp", choices=sorted(_DEMOS))
+    p = argparse.ArgumentParser(
+        description="LAPIS pipeline driver (lapis-opt | lapis-translate)",
+        epilog=_CLI_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--demo", default="mlp", choices=sorted(_DEMOS),
+                   help="which built-in demo graph to compile "
+                        "(see epilog; default: %(default)s)")
     p.add_argument("--target", default="auto",
                    choices=backend_mod.available_backends(),
                    help="execution backend (any registered plugin)")
     p.add_argument("--emit", default=None, help="write Python source here")
+    p.add_argument("--emit-cpp", default=None, metavar="PATH",
+                   help="write a freestanding Kokkos C++ translation unit "
+                        "here ('-' for stdout)")
     p.add_argument("--print-ir", action="store_true")
     p.add_argument("--print-ir-after-all", action="store_true",
                    help="dump IR after every pass (PassManager)")
     p.add_argument("--list-backends", action="store_true",
-                   help="list registered backends and exit")
+                   help="list registered backends (capabilities, declared "
+                        "ParallelHierarchy, pipeline) and exit")
     args = p.parse_args(argv)
 
     if args.list_backends:
         for b in backend_mod.all_backends():
             caps = ",".join(sorted(b.capabilities)) or "-"
-            print(f"{b.name:8s}  caps=[{caps}]  "
-                  f"pipeline=[{' -> '.join(b.pipeline)}]")
+            print(f"{b.name:8s}  caps=[{caps}]")
+            print(f"{'':8s}  hierarchy: {b.hierarchy.summary()}")
+            print(f"{'':8s}  translate: "
+                  f"{b.resolve_translate_target().exec_space}")
+            print(f"{'':8s}  pipeline=[{' -> '.join(b.pipeline)}]")
             if b.description:
                 print(f"{'':8s}  {b.description}")
         return 0
@@ -182,6 +231,13 @@ def main(argv=None) -> int:
         print(mod.print_ir())
     if args.emit:
         print("wrote", mod.save_source(args.emit))
+    if args.emit_cpp == "-":
+        # stdout IS the artifact (redirectable straight into g++) — the
+        # demo run and its report would corrupt the translation unit
+        print(mod.emit_cpp_source())
+        return 0
+    if args.emit_cpp:
+        print("wrote", mod.save_cpp(args.emit_cpp))
     y = mod(*example)
     print("output shape:", y.shape, "sum:", float(y.sum()))
     return 0

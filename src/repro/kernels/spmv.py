@@ -27,6 +27,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu  # noqa: F401
 
+from repro.core.ir import ell_storage_width
 from repro.kernels import pallas_compat
 
 
@@ -68,15 +69,14 @@ def csr_to_ell(indptr, indices, values, n_rows: int, n_cols: int,
         # degenerate matrix: indptr is the single sentinel 0, so the row
         # windows below would index indptr[:-1] into an undefined width —
         # return a well-formed all-padding ELL instead
-        width = max(_ceil(max(max_nnz_row or 0, 1), pad_to) * pad_to,
-                    pad_to)
+        width = ell_storage_width(max_nnz_row, pad_to)
         return EllMatrix(jnp.zeros((0, width), values.dtype),
                          jnp.zeros((0, width), jnp.int32),
                          jnp.zeros((0, width), bool), 0, n_cols, 0.0)
     row_len = indptr[1:] - indptr[:-1]
     if max_nnz_row is None:
         max_nnz_row = int(jnp.max(row_len))
-    width = max(_ceil(max(max_nnz_row, 1), pad_to) * pad_to, pad_to)
+    width = ell_storage_width(max_nnz_row, pad_to)
     offs = jnp.arange(width)[None, :]
     idx = indptr[:-1, None] + offs
     valid = offs < row_len[:, None]

@@ -1,0 +1,165 @@
+// Minimal Kokkos API surface stub — for `g++ -std=c++17 -fsyntax-only`
+// checks of lapis-translate output ONLY.  Not a Kokkos implementation:
+// every body is a no-op; what it models is the *types* (views are
+// rank-checked, policies take the real constructor shapes, reducers and
+// nested ranges have the real signatures), so a unit that type-checks
+// here uses the Kokkos API the way real Kokkos expects.  Used by
+// tests/test_translate.py and the CI lint job:
+//
+//   g++ -std=c++17 -fsyntax-only -I tests/kokkos_stub generated.cpp
+#ifndef LAPIS_KOKKOS_STUB_CORE_HPP
+#define LAPIS_KOKKOS_STUB_CORE_HPP
+
+#include <cstddef>
+#include <initializer_list>
+#include <string>
+
+#define KOKKOS_LAMBDA [=]
+#define KOKKOS_INLINE_FUNCTION inline
+#define KOKKOS_FUNCTION inline
+
+namespace Kokkos {
+
+namespace Impl {
+template <class T> struct strip_pointers { using type = T; };
+template <class T> struct strip_pointers<T*> : strip_pointers<T> {};
+template <class T> struct rank_of {
+  static constexpr std::size_t value = 0;
+};
+template <class T> struct rank_of<T*> {
+  static constexpr std::size_t value = rank_of<T>::value + 1;
+};
+}  // namespace Impl
+
+// -- spaces ----------------------------------------------------------------
+struct HostSpace {};
+struct Serial {
+  using memory_space = HostSpace;
+  void fence() const {}
+};
+using DefaultExecutionSpace = Serial;       // stub: host-only build
+using DefaultHostExecutionSpace = Serial;
+template <class Exec, class Mem> struct Device {
+  using execution_space = Exec;
+  using memory_space = Mem;
+};
+struct LayoutRight {};
+struct LayoutLeft {};
+
+// -- views -----------------------------------------------------------------
+template <class DataType, class... Props>
+class View {
+ public:
+  using value_type = typename Impl::strip_pointers<DataType>::type;
+  static constexpr std::size_t rank = Impl::rank_of<DataType>::value;
+  View() = default;
+  template <class... Args> explicit View(const std::string&, Args...) {}
+  template <class... Is> value_type& operator()(Is...) const {
+    static_assert(sizeof...(Is) == rank,
+                  "view indexed with the wrong number of subscripts");
+    static value_type scratch{};
+    return scratch;
+  }
+  value_type* data() const { return nullptr; }
+  std::size_t extent(int) const { return 0; }
+};
+
+template <class DataType, class... Props>
+class DualView {
+ public:
+  using t_dev = View<DataType, Props...>;
+  using t_host = View<DataType, Props...>;
+  t_dev d_view;
+  t_host h_view;
+  DualView() = default;
+  template <class... Args> explicit DualView(const std::string&, Args...) {}
+  void sync_device() {}
+  void sync_host() {}
+  void modify_device() {}
+  void modify_host() {}
+};
+
+template <class Space, class V>
+V create_mirror_view_and_copy(const Space&, const V& v) { return v; }
+
+// -- policies --------------------------------------------------------------
+struct AUTO_t {};
+inline constexpr AUTO_t AUTO{};
+
+template <class... Props>
+struct RangePolicy {
+  RangePolicy(long long, long long) {}
+};
+
+template <unsigned N> struct Rank {};
+
+template <class... Props>
+struct MDRangePolicy {
+  MDRangePolicy(std::initializer_list<long long>,
+                std::initializer_list<long long>) {}
+};
+
+struct TeamMember {
+  int league_rank() const { return 0; }
+  int team_rank() const { return 0; }
+  int league_size() const { return 1; }
+  int team_size() const { return 1; }
+  void team_barrier() const {}
+};
+
+template <class... Props>
+struct TeamPolicy {
+  using member_type = TeamMember;
+  TeamPolicy(long long, AUTO_t) {}
+  TeamPolicy(long long, AUTO_t, long long) {}
+  TeamPolicy(long long, long long) {}
+  TeamPolicy(long long, long long, long long) {}
+};
+
+struct NestedRange {};
+inline NestedRange TeamThreadRange(const TeamMember&, long long) {
+  return {};
+}
+inline NestedRange TeamThreadRange(const TeamMember&, long long,
+                                   long long) { return {}; }
+inline NestedRange ThreadVectorRange(const TeamMember&, long long) {
+  return {};
+}
+inline NestedRange ThreadVectorRange(const TeamMember&, long long,
+                                     long long) { return {}; }
+
+// -- dispatch --------------------------------------------------------------
+// Lambdas in emitted code have concrete parameter types, so their bodies
+// are type-checked at definition; the dispatchers never need to invoke.
+template <class Policy, class Functor>
+void parallel_for(const std::string&, const Policy&, const Functor&) {}
+template <class Policy, class Functor>
+void parallel_for(const Policy&, const Functor&) {}
+
+template <class T> struct Max {
+  T& value;
+  explicit Max(T& v) : value(v) {}
+};
+template <class T> struct Min {
+  T& value;
+  explicit Min(T& v) : value(v) {}
+};
+template <class T> struct Sum {
+  T& value;
+  explicit Sum(T& v) : value(v) {}
+};
+
+template <class Policy, class Functor, class Reducer>
+void parallel_reduce(const Policy&, const Functor&, Reducer&&) {}
+template <class Policy, class Functor, class Reducer>
+void parallel_reduce(const std::string&, const Policy&, const Functor&,
+                     Reducer&&) {}
+
+inline void initialize(int&, char**) {}
+inline void initialize() {}
+inline void finalize() {}
+inline void fence() {}
+
+}  // namespace Kokkos
+
+#endif  // LAPIS_KOKKOS_STUB_CORE_HPP

@@ -1,0 +1,5 @@
+// Stub: DualView lives in Kokkos_Core.hpp here (see that header).
+#ifndef LAPIS_KOKKOS_STUB_DUALVIEW_HPP
+#define LAPIS_KOKKOS_STUB_DUALVIEW_HPP
+#include "Kokkos_Core.hpp"
+#endif

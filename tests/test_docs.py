@@ -1,0 +1,60 @@
+"""Docs hygiene: generated references stay fresh, links stay alive.
+
+CI's ``docs`` job runs exactly this module — the freshness contract is
+that ``docs/passes.md`` is byte-identical to what the registry
+generates, and no markdown file in the user-facing docs tree points at
+a path that does not exist.
+"""
+import pathlib
+import re
+
+import pytest
+
+from repro.core import passmgr
+
+REPO = pathlib.Path(__file__).parent.parent
+
+DOC_FILES = sorted(
+    [REPO / "README.md", REPO / "ARCHITECTURE.md", REPO / "ROADMAP.md"] +
+    list((REPO / "docs").glob("*.md")))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def test_passes_md_matches_registry():
+    committed = (REPO / "docs" / "passes.md").read_text()
+    assert committed == passmgr.generate_pass_doc(), (
+        "docs/passes.md drifted from the pass registry — regenerate: "
+        "PYTHONPATH=src python -m repro.core.passmgr --doc > docs/passes.md")
+
+
+def test_passes_md_covers_default_pipeline():
+    from repro.core.backend import DEFAULT_PIPELINE
+    text = (REPO / "docs" / "passes.md").read_text()
+    for name in DEFAULT_PIPELINE:
+        assert f"## {name}" in text
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_no_dead_relative_links(doc):
+    assert doc.exists(), doc
+    dead = []
+    for target in _LINK.findall(doc.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not (doc.parent / path).exists():
+            dead.append(target)
+    assert not dead, f"dead relative links in {doc.name}: {dead}"
+
+
+def test_readme_exists_with_quickstart_and_backends():
+    text = (REPO / "README.md").read_text()
+    assert "pytest" in text                       # install/run line
+    assert "quickstart" in text.lower()
+    assert "--list-backends" in text or "| backend |" in text
+    for name in ("xla", "pallas", "loops", "auto"):
+        assert f"`{name}`" in text
+    assert "ARCHITECTURE.md" in text and "ROADMAP.md" in text

@@ -1,0 +1,329 @@
+"""lapis-translate tests: golden-pinned Kokkos C++ emission.
+
+Every (graph, backend) pair is pinned as a golden file under
+``tests/golden/translate/`` — the emitted text IS the artifact (the
+Kokkos-vs-high-level-models study tests emitted source textually), so
+any change to the translation layer shows up as a reviewable diff.
+Regenerate after an intentional change with::
+
+    REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest tests/test_translate.py
+
+Emitted units are additionally type-checked against the modeled Kokkos
+API surface (``tests/kokkos_stub/``) with ``g++ -std=c++17
+-fsyntax-only`` when a compiler is present.
+"""
+import os
+import pathlib
+import shutil
+import subprocess
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ops, pipeline, translate
+from repro.core.ir import Graph, Op, TensorType, Value
+from repro.core.options import CompileOptions
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden" / "translate"
+STUB_DIR = pathlib.Path(__file__).parent / "kokkos_stub"
+
+
+def _backends():
+    from repro.core import backend as backend_mod
+    return backend_mod.available_backends()
+
+
+# ---------------------------------------------------------------------------
+# the pinned graphs (small + fully deterministic: seeded weights, static
+# shapes, all tiling a pure function of the declared hierarchy)
+# ---------------------------------------------------------------------------
+
+def _matmul_graph():
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((16, 8), dtype=np.float32)
+
+    def fn(x):
+        return ops.matmul(x, ops.constant(w))
+    return fn, (jax.ShapeDtypeStruct((4, 16), "float32"),)
+
+
+def _fused_mlp_graph():
+    """matmul -> fused bias+relu region -> matmul -> softmax: every
+    acceptance construct (TeamPolicy nest, fused-region replay, DualView
+    sync) in one small unit."""
+    rng = np.random.default_rng(11)
+    w1 = rng.standard_normal((16, 32), dtype=np.float32)
+    b1 = rng.standard_normal((4, 32), dtype=np.float32)
+    w2 = rng.standard_normal((32, 8), dtype=np.float32)
+
+    def fn(x):
+        h = ops.relu(ops.add(ops.matmul(x, ops.constant(w1)),
+                             ops.constant(b1)))
+        return ops.softmax(ops.matmul(h, ops.constant(w2)))
+    return fn, (jax.ShapeDtypeStruct((4, 16), "float32"),)
+
+
+def _spmv_graph():
+    """y = relu(A @ x) over a fixed 8-row CSR matrix; on ell-layout
+    backends the golden pins the CSR->ELL conversion kernel + ELL row
+    loop, elsewhere the CSR row loop."""
+    n, nnz, max_nnz_row = 8, 12, 2
+
+    def fn(ip, ind, val, x):
+        return ops.relu(ops.spmv_csr(ip, ind, val, x, n_rows=n,
+                                     nnz_mean=1.5,
+                                     max_nnz_row=max_nnz_row))
+    specs = (jax.ShapeDtypeStruct((n + 1,), "int32"),
+             jax.ShapeDtypeStruct((nnz,), "int32"),
+             jax.ShapeDtypeStruct((nnz,), "float32"),
+             jax.ShapeDtypeStruct((n,), "float32"))
+    return fn, specs
+
+
+_GRAPHS = {
+    "matmul": _matmul_graph,
+    "fused_mlp": _fused_mlp_graph,
+    "spmv": _spmv_graph,
+}
+
+_CASES = [(g, b) for g in sorted(_GRAPHS) for b in _backends()]
+
+
+def _emit(graph_name: str, backend: str) -> str:
+    fn, specs = _GRAPHS[graph_name]()
+    mod = pipeline.compile(fn, *specs, options=CompileOptions(
+        target=backend), name=graph_name)
+    return mod.emit_cpp_source()
+
+
+@pytest.fixture(scope="module")
+def emitted():
+    cache: dict = {}
+
+    def get(graph_name: str, backend: str) -> str:
+        key = (graph_name, backend)
+        if key not in cache:
+            cache[key] = _emit(graph_name, backend)
+        return cache[key]
+    return get
+
+
+# ---------------------------------------------------------------------------
+# golden snapshots
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("graph_name,backend", _CASES)
+def test_golden_cpp(emitted, graph_name, backend):
+    text = emitted(graph_name, backend)
+    path = GOLDEN_DIR / f"{graph_name}_{backend}.cpp"
+    if os.environ.get("REGEN_GOLDENS"):
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(text)
+    assert path.exists(), (
+        f"golden {path.name} missing — generate with "
+        "REGEN_GOLDENS=1 pytest tests/test_translate.py")
+    assert text == path.read_text(), (
+        f"{path.name} drifted — if intentional, regenerate with "
+        "REGEN_GOLDENS=1")
+
+
+def test_emission_is_deterministic():
+    assert _emit("matmul", "loops") == _emit("matmul", "loops")
+
+
+# ---------------------------------------------------------------------------
+# structure: the paper's constructs appear where the IR says they should
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", _backends())
+def test_fused_mlp_has_acceptance_constructs(emitted, backend):
+    text = emitted("fused_mlp", backend)
+    assert "Kokkos::parallel_for" in text
+    assert "Kokkos::TeamPolicy" in text          # gemm/softmax nests
+    assert ".sync_device();" in text             # DualView lazy h2d
+    assert "kokkos.fused replay" in text         # one-lambda region body
+    assert "lapis_initialize" in text            # §4.4 weight loading
+    assert "#include <Kokkos_Core.hpp>" in text
+    assert "import " not in text                 # no Python leaked through
+
+
+@pytest.mark.parametrize("backend", _backends())
+def test_spmv_storage_format_per_backend(emitted, backend):
+    from repro.core import backend as backend_mod
+    text = emitted("spmv", backend)
+    assert "LapisCsr" in text                    # sparse.pack always CSR
+    if backend_mod.get_backend(backend).has_capability("ell-layout"):
+        assert "CSR -> padded ELL" in text       # sparse.convert kernel
+        assert ".valid(row, kk)" in text         # ELL row loop
+    else:
+        assert "CSR -> padded ELL" not in text
+        assert ".valid(row, kk)" not in text
+        assert ".rowptr(row + 1)" in text        # CSR row loop
+
+
+def test_translate_target_spelling(emitted):
+    assert "using lapis_exec = Kokkos::Serial;" in \
+        emitted("matmul", "loops")
+    assert "using lapis_exec = Kokkos::DefaultExecutionSpace;" in \
+        emitted("matmul", "xla")
+
+
+def test_translate_target_hook_overrides_default():
+    """A backend's explicit TranslateTarget wins over the hierarchy-based
+    default spelling (the Backend.translate_target hook)."""
+    import dataclasses
+
+    from repro.core import backend as backend_mod
+    loops = backend_mod.get_backend("loops")
+    assert loops.resolve_translate_target().exec_space == "Kokkos::Serial"
+    gpu_spelled = dataclasses.replace(
+        loops, name="loops-cuda",
+        translate_target=backend_mod.TranslateTarget(
+            exec_space="Kokkos::Cuda"))
+    assert gpu_spelled.resolve_translate_target().exec_space == \
+        "Kokkos::Cuda"
+
+
+def test_collapsed_vs_mapped_nests(emitted):
+    # library backend: elementwise nests collapse to one flat MDRange;
+    # loop-nests backend: the declared TeamThreadRange/ThreadVectorRange
+    assert "Kokkos::MDRangePolicy" in emitted("fused_mlp", "xla")
+    loops_text = emitted("fused_mlp", "loops")
+    assert "Kokkos::TeamThreadRange" in loops_text
+    assert "Kokkos::ThreadVectorRange" in loops_text
+
+
+@pytest.mark.parametrize("backend", ["xla", "loops"])
+def test_spmm_and_gemv_emission(backend, tmp_path):
+    """The remaining kk.* spellings (spmm row loop, gemv reduce nest)
+    emit and — when a compiler is present — type-check."""
+    def spmm(ip, ind, val, b):
+        return ops.spmm_csr(ip, ind, val, b, n_rows=8, nnz_mean=1.5,
+                            max_nnz_row=2)
+    specs = (jax.ShapeDtypeStruct((9,), "int32"),
+             jax.ShapeDtypeStruct((12,), "int32"),
+             jax.ShapeDtypeStruct((12,), "float32"),
+             jax.ShapeDtypeStruct((8, 4), "float32"))
+    spmm_src = pipeline.compile(
+        spmm, *specs, options=CompileOptions(target=backend),
+        name="spmm").emit_cpp_source()
+    assert "kk.spmv" not in spmm_src and "LapisCsr" in spmm_src
+    assert "ThreadVectorRange" in spmm_src       # vector over dense cols
+
+    w = np.random.default_rng(3).standard_normal((16,), dtype=np.float32)
+    gemv_src = pipeline.compile(
+        lambda x: ops.matmul(x, ops.constant(w)),
+        jax.ShapeDtypeStruct((4, 16), "float32"),
+        options=CompileOptions(target=backend),
+        name="gemv").emit_cpp_source()
+    assert "kk.gemv" in gemv_src and "parallel_reduce" in gemv_src
+
+    if shutil.which("g++"):
+        for name, text in (("spmm", spmm_src), ("gemv", gemv_src)):
+            p = tmp_path / f"{name}_{backend}.cpp"
+            p.write_text(text)
+            proc = subprocess.run(
+                ["g++", "-std=c++17", "-fsyntax-only", f"-I{STUB_DIR}",
+                 str(p)], capture_output=True, text=True)
+            assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# closure leakage is forced into the open
+# ---------------------------------------------------------------------------
+
+def test_python_closure_raises_translate_error():
+    x = Value(TensorType((4,), "float32"))
+    g = Graph("leak", [x])
+    op = g.add(Op("linalg.map", [x], [TensorType((4,), "float32")],
+                  attrs={"fn": lambda a: a}))
+    g.outputs = [op.results[0]]
+    with pytest.raises(translate.TranslateError):
+        translate.emit_cpp_source(g, CompileOptions(target="xla"))
+
+
+def test_zero_extent_graph_raises_translate_error():
+    """Zero-sized dims execute fine in the callable but have no kernels
+    worth printing — translate must refuse cleanly, not divide by zero
+    in the row-block math."""
+    w = np.zeros((16, 8), dtype=np.float32)
+    mod = pipeline.compile(
+        lambda x: ops.matmul(x, ops.constant(w)),
+        jax.ShapeDtypeStruct((0, 16), "float32"),
+        options=CompileOptions(target="xla"), name="empty")
+    assert mod(np.zeros((0, 16), np.float32)).shape == (0, 8)
+    with pytest.raises(translate.TranslateError, match="zero-extent"):
+        mod.emit_cpp_source()
+
+
+def test_float64_graph_raises_translate_error():
+    """Kernel bodies compute in f32 — a float64 graph must refuse to
+    translate rather than silently truncate."""
+    x = Value(TensorType((4,), "float64"))
+    g = Graph("f64", [x])
+    op = g.add(Op("linalg.relu", [x], [TensorType((4,), "float64")]))
+    g.outputs = [op.results[0]]
+    with pytest.raises(translate.TranslateError, match="float64"):
+        translate.emit_cpp_source(g, CompileOptions(target="xla"))
+
+
+# ---------------------------------------------------------------------------
+# g++ -fsyntax-only against the modeled Kokkos API surface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(shutil.which("g++") is None,
+                    reason="no C++ compiler present")
+@pytest.mark.parametrize("graph_name,backend", _CASES)
+def test_emitted_unit_syntax_checks(emitted, tmp_path, graph_name,
+                                    backend):
+    path = tmp_path / f"{graph_name}_{backend}.cpp"
+    path.write_text(emitted(graph_name, backend))
+    proc = subprocess.run(
+        ["g++", "-std=c++17", "-fsyntax-only", f"-I{STUB_DIR}",
+         str(path)], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# CLI acceptance: --emit-cpp and the enriched --list-backends
+# ---------------------------------------------------------------------------
+
+def test_cli_emit_cpp_stdout(capsys):
+    assert pipeline.main(["--demo", "mlp", "--emit-cpp", "-"]) == 0
+    out = capsys.readouterr().out
+    assert "Kokkos::parallel_for" in out
+    assert "Kokkos::TeamPolicy" in out
+    assert ".sync_device();" in out
+    # stdout IS the artifact: redirectable straight into g++, so the
+    # demo run report must not pollute it
+    assert "output shape:" not in out
+    assert out.rstrip().endswith("}")
+
+
+def test_cli_emit_cpp_file(tmp_path, capsys):
+    dest = tmp_path / "spmv.cpp"
+    assert pipeline.main(["--demo", "spmv", "--target", "loops",
+                          "--emit-cpp", str(dest)]) == 0
+    text = dest.read_text()
+    assert "LapisCsr" in text and "Kokkos::Serial" in text
+    assert "wrote" in capsys.readouterr().out
+
+
+def test_cli_list_backends_capabilities_and_hierarchy(capsys):
+    assert pipeline.main(["--list-backends"]) == 0
+    out = capsys.readouterr().out
+    for b in _backends():
+        assert b in out
+    assert "caps=[" in out
+    assert "hierarchy:" in out and "scratch" in out
+    assert "translate: Kokkos::Serial" in out
+
+
+def test_cli_help_documents_emit_cpp(capsys):
+    with pytest.raises(SystemExit):
+        pipeline.main(["--help"])
+    out = capsys.readouterr().out
+    assert "--emit-cpp" in out
+    assert "--demo" in out and "spmv" in out   # epilog documents the demos
+    assert "lapis-translate" in out
