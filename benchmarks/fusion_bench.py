@@ -18,7 +18,22 @@ with ``fuse_elementwise`` on and off and record:
                  (``build_callable`` unjitted) — the per-op dispatch
                  overhead fusion eliminates.
 
-Times are min-of-rounds of mean-over-reps (the low-noise estimator).
+Each time is reported as **median over interleaved rounds of
+mean-over-reps, with the IQR as a noise bar** (``*_iqr_us``; one untimed
+warm-up per callable, excluded).  A min-of-rounds point estimate — the
+previous methodology — reads below the true steady-state cost and has no
+error bar, which made the fused-vs-unfused deltas here too noisy to gate
+compiler decisions on; the cost model's measure-verify step
+(``repro.core.costmodel.measure_callable``) uses the same median
+protocol for exactly that reason.
+
+Why ``dispatch_us`` can exceed ``wall_us``: the dispatch path runs the
+executor loop *unjitted*, paying per-launch Python dispatch and a full
+host round-trip for every op in sequence, while ``wall_us`` times the
+jitted program end-to-end — XLA fuses and overlaps across op boundaries
+there, so the whole pipeline can finish in less wall time than the sum
+of its serialized per-launch host times.
+
 ``--out BENCH_fusion.json`` writes the full record for the perf
 trajectory; the CI bench-smoke job uploads it as an artifact.
 
@@ -38,23 +53,29 @@ import numpy as np
 from benchmarks.common import row
 
 
-def _paired_min_time(fns: dict, args: tuple, reps: int,
-                     rounds: int) -> dict:
-    """Seconds per call for each fn: min over ``rounds`` of the mean over
-    ``reps``, with the candidates' rounds interleaved so slow-host drift
-    hits both sides equally (one untimed warm-up each)."""
+def _paired_stats(fns: dict, args: tuple, reps: int,
+                  rounds: int) -> dict:
+    """Per-fn timing stats: each round times the mean over ``reps``; the
+    estimate is the **median** over rounds with the IQR as a noise bar,
+    candidates' rounds interleaved so slow-host drift hits both sides
+    equally (one untimed warm-up each, excluded from the samples)."""
     import jax
     for fn in fns.values():
         jax.block_until_ready(fn(*args))
-    best = {k: float("inf") for k in fns}
+    samples: dict = {k: [] for k in fns}
     for _ in range(rounds):
         for k, fn in fns.items():
             t0 = time.perf_counter()
             for _ in range(reps):
                 out = fn(*args)
             jax.block_until_ready(out)
-            best[k] = min(best[k], (time.perf_counter() - t0) / reps)
-    return best
+            samples[k].append((time.perf_counter() - t0) / reps)
+    stats = {}
+    for k, s in samples.items():
+        q1, med, q3 = np.quantile(s, (0.25, 0.5, 0.75))
+        stats[k] = {"median_s": float(med), "iqr_s": float(q3 - q1),
+                    "rounds": len(s)}
+    return stats
 
 
 def _chain_workload(rng, depth: int, shape: tuple):
@@ -90,13 +111,16 @@ def _measure_pair(fn, example, target, reps, rounds):
             for variant in ("fused", "unfused")}
     # unjitted first: it seeds the DualView weight caches with concrete
     # arrays (running the jit trace first would cache tracers instead)
-    dispatch = _paired_min_time(
+    dispatch = _paired_stats(
         {k: m.forward.unjitted for k, m in mods.items()}, example,
         reps, rounds)
-    wall = _paired_min_time(mods, example, reps, rounds)
+    wall = _paired_stats(mods, example, reps, rounds)
     return {variant: {"launches": mods[variant].launch_count,
-                      "wall_us": wall[variant] * 1e6,
-                      "dispatch_us": dispatch[variant] * 1e6}
+                      "wall_us": wall[variant]["median_s"] * 1e6,
+                      "wall_iqr_us": wall[variant]["iqr_s"] * 1e6,
+                      "dispatch_us": dispatch[variant]["median_s"] * 1e6,
+                      "dispatch_iqr_us": dispatch[variant]["iqr_s"] * 1e6,
+                      "rounds": wall[variant]["rounds"]}
             for variant in mods}
 
 
@@ -105,8 +129,8 @@ def main(print_rows=True, targets=None, smoke=False, out=None):
 
     if targets is None:
         targets = [current_options().target]
-    # many short interleaved rounds: min-of-round-means converges to the
-    # noise floor for both variants even on busy hosts
+    # many short interleaved rounds: the median of round-means is robust
+    # to slow-host outliers and the IQR over the same samples is the bar
     reps, rounds = (50, 4) if smoke else (100, 20)
     rng = np.random.default_rng(0)
     rows, record = [], {"bench": "fusion", "smoke": bool(smoke),
@@ -120,11 +144,13 @@ def main(print_rows=True, targets=None, smoke=False, out=None):
             rows.append(row(
                 f"fusion/{name}/{target}/fused", fused["wall_us"],
                 f"launches={fused['launches']} "
+                f"iqr_us={fused['wall_iqr_us']:.1f} "
                 f"dispatch_us={fused['dispatch_us']:.1f}"))
             rows.append(row(
                 f"fusion/{name}/{target}/unfused",
                 unfused["wall_us"],
                 f"launches={unfused['launches']} "
+                f"iqr_us={unfused['wall_iqr_us']:.1f} "
                 f"dispatch_us={unfused['dispatch_us']:.1f}"))
     if print_rows:
         print("\n".join(rows))

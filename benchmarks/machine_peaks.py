@@ -1,0 +1,167 @@
+"""Machine-peaks microbenchmark — measure the roofline ceilings once per
+host and persist them for the cost model.
+
+The roofline model (``repro.core.costmodel``) divides by four machine
+constants: streaming main-memory bandwidth, scratch-tier (cache)
+bandwidth, dense-matmul flops, and per-launch dispatch overhead.  This
+bench measures each with a dedicated microkernel and persists the result
+as ``machine_peaks_<fingerprint>.json`` under the tuning-cache directory
+(``$REPRO_TUNE_CACHE`` or ``~/.cache/repro-tune``) — fingerprinted on
+host + jax runtime, so a measurement never leaks across machines.  Until
+it runs, the model falls back to documented data-driven defaults
+(``costmodel.DEFAULT_PEAKS``); backends whose hierarchy declares its own
+``bandwidth_bytes_per_s`` / ``flops_per_s`` (the TPU hierarchy) never
+consult the host numbers at all.
+
+Protocol per microkernel: one untimed warm-up, then the median over
+rounds of mean-over-reps (the same estimator the fusion bench and
+autotune's measure-verify use).
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.machine_peaks            # measure + persist
+    PYTHONPATH=src python -m benchmarks.machine_peaks --smoke    # tiny sizes
+    PYTHONPATH=src python -m benchmarks.machine_peaks --print    # show, don't write
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+
+def _median_time(fn, args, reps: int, rounds: int) -> float:
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    samples = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) / reps)
+    return statistics.median(samples)
+
+
+def measure_bandwidth(n_elems: int, reps: int, rounds: int) -> float:
+    """Streaming bandwidth: y = x + 1 over an array far larger than any
+    cache — one read + one write per element."""
+    import jax
+    import jax.numpy as jnp
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(n_elems).astype(np.float32))
+    f = jax.jit(lambda v: v + 1.0)
+    sec = _median_time(f, (x,), reps, rounds)
+    return 2.0 * n_elems * 4 / sec
+
+
+def measure_scratch_bandwidth(n_elems: int, reps: int, rounds: int,
+                              sweeps: int = 16) -> float:
+    """Cache-tier bandwidth: the same streaming kernel iterated over a
+    cache-resident block, so after the first sweep every access hits the
+    fast tier."""
+    import jax
+    import jax.numpy as jnp
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(n_elems).astype(np.float32))
+
+    def f(v):
+        for _ in range(sweeps):
+            v = v + 1.0
+        return v
+    jf = jax.jit(f)
+    sec = _median_time(jf, (x,), reps, rounds)
+    return 2.0 * n_elems * 4 * sweeps / sec
+
+
+def measure_flops(n: int, reps: int, rounds: int) -> float:
+    """Dense-matmul peak: an n×n f32 matmul is 2n³ flops and the BLAS
+    path is the fastest compute this host exposes."""
+    import jax
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    f = jax.jit(lambda x, y: x @ y)
+    sec = _median_time(f, (a, b), reps, rounds)
+    return 2.0 * n ** 3 / sec
+
+
+def measure_launch_overhead(reps: int, rounds: int) -> float:
+    """Per-launch overhead: the wall time of the smallest possible jitted
+    kernel is pure dispatch — compute on one element is unmeasurable."""
+    import jax
+    import jax.numpy as jnp
+    x = jnp.zeros((1,), jnp.float32)
+    f = jax.jit(lambda v: v + 1.0)
+    return _median_time(f, (x,), reps, rounds)
+
+
+def measure_dispatch_overhead(reps: int, rounds: int) -> float:
+    """Per-call host overhead of an *unjitted* op — what the emitter's
+    executor loop pays per op (the fusion bench's dispatch path)."""
+    import jax.numpy as jnp
+    x = jnp.zeros((1,), jnp.float32)
+    return _median_time(lambda v: v + 1.0, (x,), reps, rounds)
+
+
+def measure_peaks(smoke: bool = False):
+    from repro.core.costmodel import MachinePeaks, machine_fingerprint
+    if smoke:
+        stream_n, scratch_n, mm_n = 2 ** 20, 2 ** 14, 256
+        reps, rounds = 5, 3
+    else:
+        stream_n, scratch_n, mm_n = 2 ** 26, 2 ** 15, 1024
+        reps, rounds = 20, 5
+    return MachinePeaks(
+        bandwidth_bytes_per_s=measure_bandwidth(stream_n, reps, rounds),
+        scratch_bandwidth_bytes_per_s=measure_scratch_bandwidth(
+            scratch_n, reps, rounds),
+        flops_per_s=measure_flops(mm_n, reps, rounds),
+        launch_overhead_s=measure_launch_overhead(reps * 10, rounds),
+        dispatch_overhead_s=measure_dispatch_overhead(reps * 10, rounds),
+        fingerprint=machine_fingerprint(),
+        measured=True)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.core import costmodel
+    p = argparse.ArgumentParser(
+        description="measure roofline machine peaks and persist them for "
+                    "the cost model")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny sizes (CI smoke; numbers are NOT peaks)")
+    p.add_argument("--print", dest="show_only", action="store_true",
+                   help="measure and print, don't persist")
+    p.add_argument("--force", action="store_true",
+                   help="re-measure even if a persisted file exists")
+    args = p.parse_args(argv)
+
+    existing = costmodel.load_peaks()
+    if existing.measured and not (args.force or args.show_only):
+        print(f"# peaks already measured for fingerprint "
+              f"{existing.fingerprint} (use --force to re-measure)")
+        peaks = existing
+    else:
+        peaks = measure_peaks(smoke=args.smoke)
+        if not args.show_only:
+            path = costmodel.save_peaks(peaks)
+            print(f"# wrote {path}")
+    print(f"machine_peaks/bandwidth_gb_s,"
+          f"{peaks.bandwidth_bytes_per_s / 1e9:.2f},")
+    print(f"machine_peaks/scratch_bandwidth_gb_s,"
+          f"{peaks.scratch_bandwidth_bytes_per_s / 1e9:.2f},")
+    print(f"machine_peaks/gflops,{peaks.flops_per_s / 1e9:.2f},")
+    print(f"machine_peaks/launch_overhead_us,"
+          f"{peaks.launch_overhead_s * 1e6:.2f},")
+    print(f"machine_peaks/dispatch_overhead_us,"
+          f"{peaks.dispatch_overhead_s * 1e6:.2f},")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,7 +22,8 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma list: "
-                        "gemm,fusion,spmv,bgemm,mala,resnet,roofline")
+                        "gemm,fusion,autotune,spmv,bgemm,mala,resnet,"
+                        "roofline")
     p.add_argument("--targets", default=None,
                    help="comma list of backend names to benchmark side by "
                         "side (default: the ambient target)")
@@ -50,8 +51,9 @@ def main(argv=None) -> int:
             except backend_mod.UnknownBackendError as e:
                 p.error(str(e))
 
-    from benchmarks import (batched_gemm_bench, fusion_bench, gemm_bench,
-                            mala_bench, resnet_bench, spmv_bench)
+    from benchmarks import (autotune_bench, batched_gemm_bench,
+                            fusion_bench, gemm_bench, mala_bench,
+                            resnet_bench, spmv_bench)
     from benchmarks import roofline as roofline_bench
 
     # last column: section goes through pipeline.compile and honors the
@@ -62,6 +64,8 @@ def main(argv=None) -> int:
         ("gemm", "Table 6.2 — SGEMM zero-overhead", gemm_bench.main, True),
         ("fusion", "kokkos.fused — launch count + wall, fused vs unfused",
          fusion_bench.main, True),
+        ("autotune", "cost model — gated fusion, tuned tiling, tune cache",
+         autotune_bench.main, False),     # pins the loops backend itself
         ("spmv", "Fig 6.1 — SpMV, 4 matrices", spmv_bench.main, True),
         ("bgemm", "Fig 6.3 — batched GEMM", batched_gemm_bench.main, False),
         ("mala", "Fig 6.2a — MALA DNN inference", mala_bench.main, True),

@@ -6,10 +6,19 @@ through the same plugin API any new architecture uses.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.core.backend import (Backend, LIBRARY_PREFERRED, TPU_HIERARCHY,
                                 get_backend, register_backend)
+
+# Library backends trace every op into one jit-compiled XLA program: op
+# boundaries are not dispatch boundaries, so the cost model must see zero
+# per-launch overhead there (the runtime fuses through them anyway) while
+# the physical chip geometry stays TPU-shaped.
+_LIBRARY_HIERARCHY = dataclasses.replace(TPU_HIERARCHY,
+                                         launch_overhead_s=0.0)
 
 
 def _load_kernels() -> None:
@@ -37,8 +46,9 @@ register_backend(Backend(
     description="XLA library path (TPU's cuBLAS: MXU dot_general; "
                 "linalg-to-kokkoskernels analogue)",
     capabilities=frozenset({"library", "source-emission", "sparse"}),
-    hierarchy=TPU_HIERARCHY,     # same chip; the library owns the mapping,
-                                 # so map_parallelism collapses nests
+    hierarchy=_LIBRARY_HIERARCHY,  # same chip; the library owns the
+                                   # mapping, so map_parallelism collapses
+                                   # nests (and fusion can't save launches)
     loader=_load_kernels,
 ))
 
@@ -58,7 +68,7 @@ register_backend(Backend(
     description="per-op heuristic: library for hand-optimized ops, "
                 "kernels elsewhere when a TPU backs them",
     capabilities=frozenset({"library", "sparse"}),
-    hierarchy=TPU_HIERARCHY,
+    hierarchy=_LIBRARY_HIERARCHY,
     fallbacks=("xla",),
     loader=_load_kernels,
     selector=_auto_select,

@@ -30,7 +30,14 @@ SERIAL_HIERARCHY = ParallelHierarchy(
             LevelSpec("serial-block", width=8, max_extent=512),
             LevelSpec("jnp-vector", width=128, max_extent=1024)),
     scratch_bytes=96 * 2**20,
-    compute_unit=128)
+    compute_unit=128,
+    # bandwidth/flops stay None → the cost model uses the measured host
+    # peaks (benchmarks/machine_peaks.py).  launch_overhead_s=0.0 is
+    # deliberate and load-bearing: this backend's "launches" are jnp ops
+    # traced into ONE jit program — there is no dispatch boundary to
+    # save, so the cost model's fusion gate correctly refuses to fuse
+    # here (BENCH_fusion.json: fusing made the chain workload *slower*).
+    launch_overhead_s=0.0)
 
 # Cap on a single tile's broadcast working set (bm × k × n elements).  The
 # loop nest materializes the elementwise product before reducing, so the

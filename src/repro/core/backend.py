@@ -87,6 +87,16 @@ class ParallelHierarchy:
     levels: tuple = ()
     scratch_bytes: int = 96 * 2**20
     compute_unit: int = 128
+    # Performance ceilings the roofline cost model divides by
+    # (repro.core.costmodel).  ``None`` means "inherit the measured host
+    # peaks" (benchmarks/machine_peaks.py) — the right default for host
+    # backends; a device backend declares its architecture's numbers as
+    # data here.  ``launch_overhead_s=0.0`` is a meaningful declaration:
+    # it says this backend's "launches" are jit-traced into one program
+    # (no real dispatch boundary), so fusion can't save launch overhead.
+    bandwidth_bytes_per_s: Optional[float] = None
+    flops_per_s: Optional[float] = None
+    launch_overhead_s: Optional[float] = None
 
     @property
     def depth(self) -> int:
@@ -120,17 +130,28 @@ class ParallelHierarchy:
 
     # -- declarative round-trip (plugins may ship hierarchies as data) ------
     def to_dict(self) -> dict:
-        return {"exec_space": self.exec_space,
-                "scratch_bytes": self.scratch_bytes,
-                "compute_unit": self.compute_unit,
-                "levels": [dataclasses.asdict(s) for s in self.levels]}
+        d = {"exec_space": self.exec_space,
+             "scratch_bytes": self.scratch_bytes,
+             "compute_unit": self.compute_unit,
+             "levels": [dataclasses.asdict(s) for s in self.levels]}
+        # perf ceilings only when declared — keeps the dict shape (and the
+        # tuning-cache keys of) hierarchies that inherit host peaks stable
+        for f in ("bandwidth_bytes_per_s", "flops_per_s",
+                  "launch_overhead_s"):
+            v = getattr(self, f)
+            if v is not None:
+                d[f] = v
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ParallelHierarchy":
         return cls(exec_space=d.get("exec_space", "device"),
                    scratch_bytes=d.get("scratch_bytes", 96 * 2**20),
                    compute_unit=d.get("compute_unit", 128),
-                   levels=tuple(LevelSpec(**s) for s in d.get("levels", ())))
+                   levels=tuple(LevelSpec(**s) for s in d.get("levels", ())),
+                   bandwidth_bytes_per_s=d.get("bandwidth_bytes_per_s"),
+                   flops_per_s=d.get("flops_per_s"),
+                   launch_overhead_s=d.get("launch_overhead_s"))
 
 
     def summary(self) -> str:
@@ -176,7 +197,13 @@ TPU_HIERARCHY = ParallelHierarchy(
             LevelSpec("block", width=8, max_extent=512),
             LevelSpec("lane", width=128, max_extent=1024)),
     scratch_bytes=96 * 2**20,      # usable VMEM per core (v5e ~128MiB)
-    compute_unit=128)              # MXU systolic array edge
+    compute_unit=128,              # MXU systolic array edge
+    # declared chip ceilings for the roofline model (v5e datasheet-class
+    # numbers: HBM ~819 GB/s, dense matmul ~2e13 f32 flops/s, grid-step
+    # dispatch ~2µs) — data a pass may only consume via the cost model
+    bandwidth_bytes_per_s=8.1e11,
+    flops_per_s=2.0e13,
+    launch_overhead_s=2.0e-6)
 
 # Ops for which the library path is known hand-optimized (paper: "operations
 # that we know are hand-optimized" get intercepted with library calls).

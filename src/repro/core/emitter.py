@@ -481,7 +481,8 @@ def emit_python_source(graph: Graph,
                                   if k not in ("fn", "tiling", "kind",
                                                "iter_space", "level_map",
                                                "nest", "exec_space",
-                                               "collapse", "src", "ops")})
+                                               "collapse", "src", "ops",
+                                               "cost")})
                 for pr, rr in zip(proxy.results, op.results):
                     names[pr.id] = names[rr.id]
                 body.append(_src_line(proxy, names))

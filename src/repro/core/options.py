@@ -43,6 +43,20 @@ class CompileOptions:
     donate_buffers: bool = True
     verify_ir: bool = False              # PassManager: verify SSA per pass
     print_ir_after_all: bool = False     # PassManager: dump IR per pass
+    cost_model: bool = False             # rank tilings / gate fusion with the
+                                         # roofline model (repro.core.costmodel)
+    autotune: bool = False               # measure-verify the model's top-k
+                                         # candidates on the real backend
+                                         # (implies cost_model)
+    autotune_top_k: int = 3              # candidates autotune measures
+    tune_cache_dir: Optional[str] = None  # tuning-cache root override
+                                          # (default: $REPRO_TUNE_CACHE or
+                                          # ~/.cache/repro-tune)
+
+    def resolve_cost_model(self) -> bool:
+        """Autotuning needs the model's ranking to pick its top-k, so
+        ``autotune`` implies ``cost_model``."""
+        return self.cost_model or self.autotune
 
     def resolve_interpret(self) -> bool:
         if self.interpret is not None:

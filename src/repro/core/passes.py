@@ -56,12 +56,23 @@ _FUSABLE = LINALG_ELEMENTWISE | {"kokkos.fused"}
 
 
 @register_pass(
-    reads="single-use producer->consumer chains of linalg elementwise ops",
+    reads="single-use producer->consumer chains of linalg elementwise ops; "
+          "the cost model's fusion gate when options.cost_model",
     writes="kokkos.fused region ops (structured sub-op bodies)")
 def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
                      ) -> int:
     """Fuse producer→consumer chains of elementwise ops where the
     intermediate value has exactly one use.  Returns #fusions performed.
+
+    With ``options.cost_model`` (or ``autotune``), each candidate pair is
+    additionally gated by :meth:`repro.core.costmodel.CostModel.
+    fusion_gate`: fuse only when the predicted fused time beats the two
+    separate launches (one saved launch overhead plus the fused edge's
+    write+re-read moving from main memory to the scratch tier).  On
+    backends whose hierarchy declares ``launch_overhead_s=0.0`` — host
+    backends whose "launches" jit-trace into one XLA program — the gate
+    rejects every pair, which is exactly what ``BENCH_fusion.json``
+    measured there (launches 12→1, wall time flat to worse).
 
     Worklist formulation: the users map is built once and maintained
     incrementally, only the newly fused op is re-enqueued (a fusion can
@@ -74,6 +85,10 @@ def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
     options = options or current_options()
     if not options.fuse_elementwise:
         return 0
+    gate = None
+    if options.resolve_cost_model():
+        from repro.core.costmodel import CostModel
+        gate = CostModel.for_options(options)
     fused = 0
     users = graph.users()
     pos = {id(op): i for i, op in enumerate(graph.ops)}
@@ -91,6 +106,8 @@ def fuse_elementwise(graph: Graph, options: Optional[CompileOptions] = None
             continue
         if user_op.results[0].shape != op.results[0].shape:
             continue  # only same-shape chains (no broadcast re-analysis)
+        if gate is not None and not gate.fusion_gate(op, user_op):
+            continue  # predicted fused time does not beat the two launches
         new = _build_fused_op(op, user_op, operand_idx)
         # O(1) surgery: the fused op takes the consumer's slot; the
         # producer's slot becomes a tombstone compacted after the loop
@@ -207,7 +224,10 @@ def sparsify(graph: Graph,
     backend = options.backend()
     if not backend.has_capability("sparse"):
         return 0
+    from repro.core.costmodel import CostModel
     hier = options.resolve_hierarchy()
+    model = CostModel(hier)
+    use_model = options.resolve_cost_model()
     rewritten = 0
     for op in list(graph.ops):
         kk = _SPARSE_TO_KK.get(op.opname)
@@ -220,7 +240,19 @@ def sparsify(graph: Graph,
         n_rows = a.type.shape[0]
         nnz_mean = (op.attrs.get("nnz_mean") or enc.nnz_mean or
                     (enc.nnz / max(n_rows, 1) if enc.nnz else 1.0))
-        tiling = choose_spmv_tiling(n_rows, nnz_mean, hier)
+        itemsize = dtype_itemsize(a.type.dtype)
+        n_cols = dense.type.shape[1] if len(dense.type.shape) == 2 else 1
+        cands = candidate_spmv_tilings(n_rows, nnz_mean, hier)
+
+        def spmv_cost(t, _n=n_rows, _z=nnz_mean, _i=itemsize, _c=n_cols):
+            return model.spmv_cost(_n, _z, _i, t, _c)
+        if use_model:
+            pred, tiling = model.rank(cands, spmv_cost)[0]
+            source = "model"
+        else:
+            tiling = cands[0]
+            pred, source = spmv_cost(tiling), "heuristic"
+        cost = {"predicted_us": round(pred * 1e6, 3), "source": source}
         # logical nest of the sparse contraction (bound to physical
         # levels the same way map_parallelism binds dense nests)
         nest = ("league", "team", "vector")
@@ -236,7 +268,7 @@ def sparsify(graph: Graph,
             new_ops.append(conv)
             a = conv.results[0]
         new = Op(kk, [a, dense], [r.type for r in op.results],
-                 attrs={**op.attrs, "tiling": tiling,
+                 attrs={**op.attrs, "tiling": tiling, "cost": cost,
                         "exec_space": hier.exec_space,
                         "level_map": hier.map_levels(nest)})
         new_ops.append(new)
@@ -479,16 +511,210 @@ def choose_map_blocks(shape: tuple, itemsize: int, n_operands: int,
     return {"block": tuple(block), "grid": grid}
 
 
+# ---------------------------------------------------------------------------
+# candidate generation — the choose_* heuristics as candidate generators
+# ---------------------------------------------------------------------------
+# Each candidate_* function returns a list of legal tilings: the heuristic
+# first (candidate 0 — ties in the cost model's stable ranking keep it),
+# then width-aligned scalings of each dimension, deduplicated and filtered
+# to the same scratch-budget constraint the heuristic honors.  The cost
+# model ranks them (options.cost_model); autotune measure-verifies the
+# top-k (options.autotune); default compiles just take candidate 0, which
+# is exactly the old behaviour.
+
+_CAND_SCALES = (0.5, 2.0, 0.25, 4.0)
+
+
+def candidate_matmul_blocks(m: int, n: int, k: int, itemsize: int,
+                            hier) -> list:
+    """Legal matmul block-shape candidates, heuristic first.  Every
+    candidate keeps the width alignment and the scratch constraint of
+    :func:`choose_matmul_blocks` (working set ≤ scratch_bytes/2)."""
+    base = choose_matmul_blocks(m, n, k, itemsize, hier)
+
+    def fits(t):
+        return (t["bm"] * t["bk"] + t["bk"] * t["bn"]) * itemsize \
+            + t["bm"] * t["bn"] * 4 <= hier.scratch_bytes // 2
+
+    dims = (("bm", hier.team_width, m), ("bn", hier.vector_width, n),
+            ("bk", hier.vector_width, k))
+    cands, seen = [], set()
+
+    def add(t):
+        key = (t["bm"], t["bn"], t["bk"])
+        if key not in seen and fits(t):
+            seen.add(key)
+            cands.append(t)
+
+    add(base)
+    for name, width, extent in dims:
+        for scale in _CAND_SCALES:
+            t = dict(base)
+            v = max(_round_up(int(base[name] * scale), width), width)
+            t[name] = min(v, _round_up(extent, width))
+            add(t)
+    for scale in (0.5, 2.0):    # all dims together (isotropic rescale)
+        t = {nm: min(max(_round_up(int(base[nm] * scale), w), w),
+                     _round_up(ext, w)) for nm, w, ext in dims}
+        add(t)
+    return cands or [base]      # over-tight scratch: keep the heuristic
+
+
+def candidate_map_blocks(shape: tuple, itemsize: int, n_operands: int,
+                         hier) -> list:
+    """Legal elementwise block candidates, heuristic first.  Variants
+    rescale the team (second-innermost) block dimension and toggle
+    leading-dim collapsing; all stay within the per-block scratch budget
+    :func:`choose_map_blocks` charges (footprint ≤ scratch /
+    (2 · n_operands))."""
+    base = choose_map_blocks(shape, itemsize, n_operands, hier)
+    if not shape or not hier.levels:
+        return [base]
+    budget = hier.scratch_bytes // max(2 * n_operands, 2)
+    team_w = hier.team_width
+    cands, seen = [], set()
+
+    def add(block):
+        block = tuple(int(b) for b in block)
+        if any(b < 1 for b in block):
+            return
+        if int(np.prod(block)) * itemsize > budget:
+            return
+        if block not in seen:
+            seen.add(block)
+            cands.append({"block": block,
+                          "grid": tuple(-(-s // b)
+                                        for s, b in zip(shape, block))})
+
+    bb = list(base["block"])
+    add(bb)
+    if len(shape) >= 2:
+        for scale in _CAND_SCALES:
+            b = list(bb)
+            v = max(_round_up(int(bb[-2] * scale), team_w), team_w)
+            b[-2] = min(v, _round_up(shape[-2], team_w))
+            add(b)
+    for i in range(len(shape) - 2):   # un-collapse / collapse outer dims
+        b = list(bb)
+        b[i] = 1 if bb[i] != 1 else shape[i]
+        add(b)
+    return cands or [base]
+
+
+def candidate_spmv_tilings(n_rows: int, nnz_mean: float, hier) -> list:
+    """Legal SpMV row-block candidates, heuristic first.  Variants
+    rescale the row block within the same storage bound the heuristic
+    derives from scratch (a row block's padded values+indices planes)."""
+    base = choose_spmv_tiling(n_rows, nnz_mean, hier)
+
+    def fits(rb):
+        return rb * base["row_width"] * 64 <= hier.scratch_bytes
+
+    cands, seen = [], set()
+
+    def add(rb):
+        rb = max(min(int(rb), _round_up(max(n_rows, 1), 8)), 1)
+        if rb not in seen and fits(rb):
+            seen.add(rb)
+            cands.append({"row_block": rb,
+                          "row_width": base["row_width"]})
+
+    add(base["row_block"])
+    for scale in _CAND_SCALES:
+        add(_round_down_pow2(max(int(base["row_block"] * scale), 1)))
+    return cands or [base]
+
+
+def _decide_tiling(op, cands, cost_fn, *, options, model, cache=None,
+                   measure_fn=None, shapes=()) -> dict:
+    """Pick ``op``'s tiling from ``cands``, set ``attrs["tiling"]`` and
+    the ``attrs["cost"]`` record explaining the decision
+    (``predicted_us`` + ``source``: heuristic | model | autotune —
+    satellite: the IR shows *why* a mapping was picked).
+
+    Autotune path: the per-(backend, op, shape, hierarchy) tuning cache
+    is consulted first; a hit replays the stored tiling *and* cost attrs
+    verbatim (IR identical to the compile that filled the cache, zero
+    re-search).  On a miss the model's top-k candidates are measured on
+    the real backend, the winner persisted."""
+    from repro.core.costmodel import _json_tiling
+    if not options.resolve_cost_model():
+        tiling = cands[0]
+        op.attrs["tiling"] = tiling
+        op.attrs["cost"] = {"predicted_us": round(cost_fn(tiling) * 1e6, 3),
+                            "source": "heuristic"}
+        return tiling
+    ranked = model.rank(cands, cost_fn)
+    if options.autotune and cache is not None and measure_fn is not None \
+            and len(cands) > 1:
+        key = cache.key(options.backend().name, op.opname, shapes,
+                        model.hierarchy)
+        rec = cache.get(key)
+        if rec is not None:
+            tiling = _json_tiling(rec["tiling"])
+            op.attrs["tiling"] = tiling
+            op.attrs["cost"] = dict(rec["cost"])
+            return tiling
+        top = ranked[:max(int(options.autotune_top_k), 1)]
+        measured = [(measure_fn(cand), i, pred, cand)
+                    for i, (pred, cand) in enumerate(top)]
+        measured.sort(key=lambda t: (t[0], t[1]))   # stable: model order
+        sec, _, pred, tiling = measured[0]
+        cost = {"predicted_us": round(pred * 1e6, 3),
+                "measured_us": round(sec * 1e6, 3),
+                "source": "autotune"}
+        op.attrs["tiling"] = tiling
+        op.attrs["cost"] = cost
+        cache.put(key, {
+            "opname": op.opname, "backend": options.backend().name,
+            "shapes": [list(s) for s in shapes],
+            "tiling": {k: (list(v) if isinstance(v, tuple) else v)
+                       for k, v in tiling.items()},
+            "cost": cost})
+        return tiling
+    pred, tiling = ranked[0]
+    op.attrs["tiling"] = tiling
+    op.attrs["cost"] = {"predicted_us": round(pred * 1e6, 3),
+                        "source": "model"}
+    return tiling
+
+
+def _gemm_measure_fn(op, options):
+    """Measure one gemm tiling candidate on the real backend: dispatch
+    the op through the registry exactly as the emitter would, jit with
+    the candidate tiling closed over, and time with the benchmarks'
+    median protocol (seeded inputs — measurement is deterministic in
+    everything but the clock)."""
+    opname = op.opname
+    shapes = tuple(tuple(o.type.shape) for o in op.operands)
+    dtypes = tuple(o.type.dtype for o in op.operands)
+
+    def measure(tiling):
+        import jax
+        import jax.numpy as jnp
+        from repro.core import registry
+        from repro.core.costmodel import measure_callable
+        from repro.core.ir import _np_dtype
+        fn = registry.dispatch(opname, options)
+        rng = np.random.default_rng(0)
+        args = tuple(jnp.asarray(
+            rng.standard_normal(s).astype(_np_dtype(d)))
+            for s, d in zip(shapes, dtypes))
+        call = jax.jit(lambda *xs: fn(*xs, tiling=tiling))
+        return measure_callable(call, args)
+    return measure
+
+
 @register_pass(
-    reads="logical kokkos.* nests and kk.gemm / kk.batched_gemm; the backend's ParallelHierarchy",
-    writes='attrs: exec_space, level_map, tiling (or collapse=True on library backends)')
+    reads="logical kokkos.* nests and kk.gemm / kk.batched_gemm; the backend's ParallelHierarchy; the roofline cost model + tuning cache when options.cost_model/autotune",
+    writes='attrs: exec_space, level_map, tiling, cost (predicted_us + decision source; or collapse=True on library backends)')
 def map_parallelism(graph: Graph,
                     options: Optional[CompileOptions] = None) -> int:
     """Bind logical parallelism to the backend's declared hierarchy — the
     kokkos-loop-mapping pass, made a pure function of the
     :class:`~repro.core.backend.ParallelHierarchy` record.
 
-    * ``kk.gemm`` / ``kk.batched_gemm`` get heuristic block shapes
+    * ``kk.gemm`` / ``kk.batched_gemm`` get block shapes
       (``attrs["tiling"]``) and the hierarchy's physical level names.
     * logical ``kokkos.range_parallel`` / ``kokkos.team_parallel`` nests
       get an ``exec_space``, a logical→physical ``level_map``
@@ -499,11 +725,24 @@ def map_parallelism(graph: Graph,
     * ``kk.spmv`` / ``kk.spmm`` carry tiling + level maps from the
       sparsify pass (their only producer) — nothing to do here.
 
+    Every tiling decision goes through the ``candidate_*`` generators and
+    :func:`_decide_tiling`: by default candidate 0 (the old heuristic) is
+    taken; with ``options.cost_model`` the roofline model
+    (:mod:`repro.core.costmodel`) ranks the candidates; with
+    ``options.autotune`` the model's top-k are measure-verified on the
+    real backend and the winner persisted in the tuning cache, so repeat
+    compiles replay the decision with zero re-search.  Either way the
+    decision is recorded on the op as ``attrs["cost"]`` (predicted µs +
+    source), visible in ``--print-ir-after-all`` and the emitted C++.
+
     Supporting a new architecture is therefore declaring a hierarchy on
     its Backend record; this pass is never edited per target.
     """
+    from repro.core.costmodel import CostModel, TuneCache
     options = options or current_options()
     hier = options.resolve_hierarchy()
+    model = CostModel(hier)
+    cache = TuneCache.for_options(options) if options.autotune else None
     loop_nests = options.backend().has_capability("loop-nests")
     mapped = 0
     for op in list(graph.ops):
@@ -512,8 +751,13 @@ def map_parallelism(graph: Graph,
             m, k = a.type.shape
             n = b.type.shape[1]
             itemsize = dtype_itemsize(a.type.dtype)
-            op.attrs["tiling"] = choose_matmul_blocks(m, n, k, itemsize,
-                                                      hier)
+            _decide_tiling(
+                op, candidate_matmul_blocks(m, n, k, itemsize, hier),
+                lambda t, _m=m, _n=n, _k=k, _i=itemsize:
+                    model.matmul_cost(_m, _n, _k, _i, t),
+                options=options, model=model, cache=cache,
+                measure_fn=_gemm_measure_fn(op, options),
+                shapes=(a.type.shape, b.type.shape))
             op.attrs["exec_space"] = hier.exec_space
             op.attrs["level_map"] = hier.map_levels(
                 ("league", "team", "vector"))
@@ -523,14 +767,22 @@ def map_parallelism(graph: Graph,
             *batch, m, k = a.type.shape
             n = b.type.shape[-1]
             itemsize = dtype_itemsize(a.type.dtype)
-            t = choose_matmul_blocks(m, n, k, itemsize, hier)
             # paper §6: for small matrices vectorize the *batch* dimension
             small = m * n <= hier.compute_unit ** 2 // 4
-            t["batch_block"] = (
-                min(int(np.prod(batch)), hier.team_width * 4)
-                if small else 1)
-            t["vectorize_batch"] = small
-            op.attrs["tiling"] = t
+            batch_block = (min(int(np.prod(batch)), hier.team_width * 4)
+                           if small else 1)
+            cands = [dict(t, batch_block=batch_block,
+                          vectorize_batch=small)
+                     for t in candidate_matmul_blocks(m, n, k, itemsize,
+                                                      hier)]
+            nb = int(np.prod(batch))
+            _decide_tiling(
+                op, cands,
+                lambda t, _m=m, _n=n, _k=k, _i=itemsize, _b=nb:
+                    _b * model.matmul_cost(_m, _n, _k, _i, t),
+                options=options, model=model, cache=cache,
+                measure_fn=_gemm_measure_fn(op, options),
+                shapes=(a.type.shape, b.type.shape))
             op.attrs["exec_space"] = hier.exec_space
             op.attrs["level_map"] = hier.map_levels(
                 ("league(batch)", "team", "vector"))
@@ -550,15 +802,31 @@ def map_parallelism(graph: Graph,
             # live block buffers: one per operand plus one per region
             # sub-op result (fused intermediates stay in scratch for the
             # life of a block), or just the output for a plain nest
-            n_bufs = len(op.operands) + (len(op.regions[0].ops)
-                                         if op.regions else 1)
-            op.attrs["tiling"] = choose_map_blocks(
-                shape, itemsize, n_bufs, hier)
+            n_scratch = len(op.regions[0].ops) if op.regions else 0
+            n_bufs = len(op.operands) + (n_scratch or 1)
+            fpe = _nest_flops_per_elem(op)
+            _decide_tiling(
+                op, candidate_map_blocks(shape, itemsize, n_bufs, hier),
+                lambda t, _s=shape, _i=itemsize, _n=len(op.operands),
+                       _f=fpe, _sc=n_scratch:
+                    model.map_cost(_s, _i, _n, t, flops_per_elem=_f,
+                                   n_scratch_bufs=_sc),
+                options=options, model=model)
             op.attrs["exec_space"] = hier.exec_space
             op.attrs["level_map"] = hier.map_levels(
                 tuple(lv.name for lv in nest))
             mapped += 1
     return mapped
+
+
+def _nest_flops_per_elem(op: Op) -> float:
+    """Per-element flop count of a mapped nest: the sum over its fused
+    region's sub-ops, or the single source op's intensity."""
+    from repro.core.costmodel import flops_per_elem
+    if op.regions:
+        return float(sum(flops_per_elem(s.opname)
+                         for s in op.regions[0].ops))
+    return flops_per_elem(op.attrs.get("src", ""))
 
 
 # ---------------------------------------------------------------------------

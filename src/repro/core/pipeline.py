@@ -204,6 +204,18 @@ def main(argv=None) -> int:
     p.add_argument("--print-ir", action="store_true")
     p.add_argument("--print-ir-after-all", action="store_true",
                    help="dump IR after every pass (PassManager)")
+    p.add_argument("--cost-model", action="store_true",
+                   help="rank candidate tilings and gate fusion with the "
+                        "roofline cost model (repro.core.costmodel); the "
+                        "decision lands on each op as a `cost` attr")
+    p.add_argument("--autotune", action="store_true",
+                   help="measure-verify the cost model's top-k tiling "
+                        "candidates on the real backend (implies "
+                        "--cost-model); winners persist in the tuning "
+                        "cache ($REPRO_TUNE_CACHE or ~/.cache/repro-tune)")
+    p.add_argument("--autotune-top-k", type=int, default=3, metavar="K",
+                   help="how many model-ranked candidates --autotune "
+                        "measures (default: %(default)s)")
     p.add_argument("--list-backends", action="store_true",
                    help="list registered backends (capabilities, declared "
                         "ParallelHierarchy, pipeline) and exit")
@@ -225,7 +237,10 @@ def main(argv=None) -> int:
     # fusion stays on even with --emit: kokkos.fused regions are IR data
     # the source emitter re-serializes (the source path is total)
     opts = CompileOptions(target=args.target,
-                          print_ir_after_all=args.print_ir_after_all)
+                          print_ir_after_all=args.print_ir_after_all,
+                          cost_model=args.cost_model,
+                          autotune=args.autotune,
+                          autotune_top_k=args.autotune_top_k)
     mod = compile(fn, *specs, options=opts)
     if args.print_ir:
         print(mod.print_ir())

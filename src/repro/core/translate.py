@@ -190,7 +190,7 @@ def _fmt_attr(v) -> str:
 
 _COMMENT_ATTRS = ("src", "kind", "exec_space", "level_map", "nest",
                   "tiling", "collapse", "from", "to", "max_nnz_row",
-                  "format", "axis", "space", "lazy")
+                  "format", "axis", "space", "lazy", "cost")
 
 
 def _op_comment(op: Op, namer: ValueNamer) -> str:

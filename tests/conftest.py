@@ -7,3 +7,14 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_cache(tmp_path, monkeypatch):
+    """Point the tuning cache (and the machine-peaks lookup) at a fresh
+    per-test directory: tests must never read or pollute the user's
+    ~/.cache/repro-tune, and with no persisted peaks file the cost model
+    falls back to its documented default constants — which keeps every
+    predicted_us in IR dumps and byte-pinned goldens machine-independent."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "repro-tune"))
+    yield

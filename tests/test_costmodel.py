@@ -1,0 +1,348 @@
+"""Cost model + autotuning tests (roofline model, fusion gate, candidate
+generators, tuning cache).
+
+The conftest autouse fixture points ``REPRO_TUNE_CACHE`` at a per-test
+tmp dir, so every test here starts with no persisted peaks (the model
+uses its documented defaults — machine-independent predictions) and an
+empty tuning cache.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import costmodel, ops, pipeline
+from repro.core.backend import LevelSpec, ParallelHierarchy, TPU_HIERARCHY
+from repro.core.costmodel import CostModel, MachinePeaks, TuneCache
+from repro.core.options import CompileOptions, use_options
+from repro.core.passes import (candidate_map_blocks,
+                               candidate_matmul_blocks,
+                               candidate_spmv_tilings, choose_map_blocks,
+                               choose_matmul_blocks, choose_spmv_tiling)
+
+
+# ---------------------------------------------------------------------------
+# machine peaks — persistence + resolution
+# ---------------------------------------------------------------------------
+
+def test_default_peaks_until_measured():
+    peaks = costmodel.load_peaks()
+    assert not peaks.measured
+    assert peaks.bandwidth_bytes_per_s == \
+        costmodel.DEFAULT_PEAKS["bandwidth_bytes_per_s"]
+    assert peaks.fingerprint == costmodel.machine_fingerprint()
+
+
+def test_peaks_round_trip():
+    measured = MachinePeaks(
+        bandwidth_bytes_per_s=1.5e10, scratch_bandwidth_bytes_per_s=9e10,
+        flops_per_s=7e10, launch_overhead_s=3e-6, dispatch_overhead_s=8e-6,
+        fingerprint=costmodel.machine_fingerprint(), measured=True)
+    path = costmodel.save_peaks(measured)
+    assert costmodel.load_peaks() == measured
+    assert json.load(open(path))["measured"] is True
+
+
+def test_corrupt_peaks_file_falls_back_to_defaults(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    p = tmp_path / f"machine_peaks_{costmodel.machine_fingerprint()}.json"
+    p.write_text("{not json")
+    assert not costmodel.load_peaks().measured
+
+
+def test_declared_hierarchy_ceilings_win_over_peaks():
+    model = CostModel(TPU_HIERARCHY)
+    assert model.bandwidth == TPU_HIERARCHY.bandwidth_bytes_per_s
+    assert model.flops == TPU_HIERARCHY.flops_per_s
+    assert model.launch_overhead == TPU_HIERARCHY.launch_overhead_s
+
+
+def test_undeclared_hierarchy_inherits_host_peaks():
+    from repro.backends.loops import SERIAL_HIERARCHY
+    model = CostModel(SERIAL_HIERARCHY)
+    assert model.bandwidth == \
+        costmodel.DEFAULT_PEAKS["bandwidth_bytes_per_s"]
+    # 0.0 is a *declaration*, not a missing value — it must not fall
+    # through to the measured/default per-launch overhead
+    assert model.launch_overhead == 0.0
+
+
+def test_hierarchy_perf_fields_dict_round_trip():
+    h = dataclasses.replace(TPU_HIERARCHY)
+    assert ParallelHierarchy.from_dict(h.to_dict()) == h
+    bare = ParallelHierarchy()
+    assert "bandwidth_bytes_per_s" not in bare.to_dict()
+    assert ParallelHierarchy.from_dict(bare.to_dict()) == bare
+
+
+# ---------------------------------------------------------------------------
+# the fusion gate
+# ---------------------------------------------------------------------------
+
+def _edge_ops(shape=(256, 512)):
+    from repro.core.ir import Op, TensorType, Value
+    t = TensorType(shape, "f32")
+    x = Value(t)
+    producer = Op("linalg.relu", [x], [t])
+    consumer = Op("linalg.tanh", [producer.results[0]], [t])
+    return producer, consumer
+
+
+def test_fusion_gate_rejects_on_jit_traced_backends():
+    """launch_overhead_s=0.0 (loops/xla/auto) means op boundaries are
+    traced, not dispatched — fusing saves nothing, the gate says no."""
+    from repro.backends.loops import SERIAL_HIERARCHY
+    p, c = _edge_ops()
+    assert not CostModel(SERIAL_HIERARCHY).fusion_gate(p, c)
+
+
+def test_fusion_gate_accepts_on_real_dispatch_backends():
+    p, c = _edge_ops()
+    assert CostModel(TPU_HIERARCHY).fusion_gate(p, c)
+
+
+def test_cost_gated_pipeline_matches_unfused_on_loops():
+    """Oracle (acceptance): on loops, the cost-gated compile IS the
+    unfused program — same launch count, byte-identical emitted source —
+    so it can never be slower than unfused, and both agree numerically."""
+    def chain(x):
+        h = x
+        for f in (ops.tanh, ops.relu, ops.sigmoid, ops.neg, ops.relu):
+            h = f(h)
+        return h
+
+    x = np.random.default_rng(0).standard_normal((64, 128)) \
+        .astype(np.float32)
+    unfused = pipeline.compile(chain, x, options=CompileOptions(
+        target="loops", fuse_elementwise=False, cost_model=True))
+    gated = pipeline.compile(chain, x, options=CompileOptions(
+        target="loops", cost_model=True))
+    fused = pipeline.compile(chain, x, options=CompileOptions(
+        target="loops"))
+    assert gated.launch_count == unfused.launch_count
+    assert fused.launch_count < unfused.launch_count  # default still fuses
+    assert gated.emit_cpp_source() == unfused.emit_cpp_source()
+    np.testing.assert_allclose(gated(x), unfused(x), rtol=1e-6)
+
+
+def test_cost_gate_still_fuses_on_device_hierarchy():
+    """The gate is per-hierarchy, not a global fusion kill switch: pallas
+    declares a real per-launch overhead, so gated == fused there."""
+    def chain(x):
+        return ops.relu(ops.tanh(ops.sigmoid(x)))
+
+    x = np.random.default_rng(0).standard_normal((8, 128)) \
+        .astype(np.float32)
+    gated = pipeline.compile(chain, x, options=CompileOptions(
+        target="pallas", cost_model=True))
+    fused = pipeline.compile(chain, x, options=CompileOptions(
+        target="pallas"))
+    assert gated.launch_count == fused.launch_count
+    assert any(op.opname == "kokkos.team_parallel" and op.regions
+               for op in gated.graph.ops)
+
+
+# ---------------------------------------------------------------------------
+# candidate generators + model ranking (property tests)
+# ---------------------------------------------------------------------------
+
+def _hierarchies():
+    from repro.backends.loops import SERIAL_HIERARCHY
+    gpu = ParallelHierarchy(
+        exec_space="device",
+        levels=(LevelSpec("blockIdx"), LevelSpec("warp", width=32),
+                LevelSpec("thread", width=32, max_extent=1024)),
+        scratch_bytes=48 * 2**10, compute_unit=16)
+    tight = dataclasses.replace(TPU_HIERARCHY, scratch_bytes=2**19)
+    return [("tpu", TPU_HIERARCHY), ("serial", SERIAL_HIERARCHY),
+            ("gpu", gpu), ("tight-tpu", tight)]
+
+
+@pytest.mark.parametrize("hname,hier", _hierarchies(),
+                         ids=[n for n, _ in _hierarchies()])
+@pytest.mark.parametrize("m,n,k", [
+    (24, 24, 24), (7, 513, 129), (300, 700, 900), (2048, 128, 256)])
+def test_ranked_matmul_tilings_respect_scratch(hname, hier, m, n, k):
+    """Property (acceptance): every candidate the model may rank first
+    keeps the working set inside scratch_bytes/2 and candidate 0 is the
+    unchanged heuristic."""
+    cands = candidate_matmul_blocks(m, n, k, 4, hier)
+    assert cands[0] == choose_matmul_blocks(m, n, k, 4, hier)
+    model = CostModel(hier)
+    ranked = model.rank(cands,
+                        lambda t: model.matmul_cost(m, n, k, 4, t))
+    assert sorted(map(repr, (c for _, c in ranked))) == \
+        sorted(map(repr, cands))          # rank permutes, never invents
+    for _, t in ranked:
+        fp = (t["bm"] * t["bk"] + t["bk"] * t["bn"]) * 4 \
+            + t["bm"] * t["bn"] * 4
+        if fp > hier.scratch_bytes // 2:
+            # only the can't-shrink-further heuristic fallback may exceed
+            assert [t] == cands
+        assert t["bm"] % hier.team_width == 0
+        assert t["bn"] % hier.vector_width == 0
+        assert t["bk"] % hier.vector_width == 0
+
+
+@pytest.mark.parametrize("hname,hier", _hierarchies(),
+                         ids=[n for n, _ in _hierarchies()])
+@pytest.mark.parametrize("shape,n_ops", [
+    ((128,), 2), ((256, 512), 3), ((4, 64, 128), 5), ((2, 3, 40, 130), 4)])
+def test_ranked_map_tilings_respect_scratch(hname, hier, shape, n_ops):
+    cands = candidate_map_blocks(shape, 4, n_ops, hier)
+    assert cands[0] == choose_map_blocks(shape, 4, n_ops, hier)
+    model = CostModel(hier)
+    ranked = model.rank(cands, lambda t: model.map_cost(shape, 4, n_ops, t))
+    budget = hier.scratch_bytes // max(2 * n_ops, 2)
+    for _, t in ranked:
+        if [t] != cands:   # heuristic fallback may provably not fit
+            assert int(np.prod(t["block"])) * 4 <= budget
+        assert len(t["block"]) == len(shape)
+        # blocks cover the space: grid × block >= shape
+        for s, b, g in zip(shape, t["block"], t["grid"]):
+            assert b * g >= s
+
+
+@pytest.mark.parametrize("hname,hier", _hierarchies(),
+                         ids=[n for n, _ in _hierarchies()])
+def test_spmv_candidates_keep_heuristic_first(hname, hier):
+    cands = candidate_spmv_tilings(4096, 12.0, hier)
+    assert cands[0] == choose_spmv_tiling(4096, 12.0, hier)
+    widths = {t["row_width"] for t in cands}
+    assert widths == {cands[0]["row_width"]}   # width is layout, not tuned
+
+
+def test_rank_is_stable_on_ties():
+    """Equal predicted costs keep generation order, so the heuristic
+    (candidate 0) wins ties — cache keys and IR stay deterministic."""
+    model = CostModel(TPU_HIERARCHY)
+    cands = [{"bm": 8, "i": i} for i in range(5)]
+    ranked = model.rank(cands, lambda t: 1.0)
+    assert [c["i"] for _, c in ranked] == [0, 1, 2, 3, 4]
+
+
+def test_roofline_shape():
+    """max(memory, compute) + launches × overhead, by construction."""
+    peaks = costmodel.default_peaks()
+    model = CostModel(ParallelHierarchy(), peaks)
+    mem_bound = model.roofline(bytes_moved=1e9, flops=1.0, launches=1)
+    assert mem_bound == pytest.approx(
+        1e9 / peaks.bandwidth_bytes_per_s + peaks.launch_overhead_s)
+    comp_bound = model.roofline(bytes_moved=1.0, flops=1e12, launches=1)
+    assert comp_bound == pytest.approx(
+        1e12 / peaks.flops_per_s + peaks.launch_overhead_s)
+    assert model.roofline(0.0, 0.0, launches=10) == \
+        pytest.approx(10 * peaks.launch_overhead_s)
+
+
+# ---------------------------------------------------------------------------
+# the tuning cache
+# ---------------------------------------------------------------------------
+
+def _gemm_workload(m=256, k=128, n=128):
+    w = np.random.default_rng(1).standard_normal((k, n)) \
+        .astype(np.float32)
+
+    def fn(x):
+        return ops.matmul(x, ops.constant(w))
+
+    x = np.random.default_rng(0).standard_normal((m, k)).astype(np.float32)
+    return fn, x
+
+
+def test_tune_cache_key_is_sensitive():
+    cache = TuneCache()
+    h2 = dataclasses.replace(TPU_HIERARCHY, scratch_bytes=2**20)
+    base = cache.key("loops", "kk.gemm", [(256, 128), (128, 128)],
+                     TPU_HIERARCHY)
+    assert base == cache.key("loops", "kk.gemm", [(256, 128), (128, 128)],
+                             TPU_HIERARCHY)
+    assert base != cache.key("xla", "kk.gemm", [(256, 128), (128, 128)],
+                             TPU_HIERARCHY)
+    assert base != cache.key("loops", "kk.gemm", [(512, 128), (128, 128)],
+                             TPU_HIERARCHY)
+    assert base != cache.key("loops", "kk.gemm", [(256, 128), (128, 128)],
+                             h2)
+
+
+def test_autotune_second_compile_hits_cache_identical_ir():
+    """Acceptance: repeat compiles of the same (backend, op, shape) hit
+    the tuning cache with zero re-search and reproduce the first
+    compile's IR byte for byte (modulo SSA ids → compare emitted C++)."""
+    fn, x = _gemm_workload()
+    opts = CompileOptions(target="loops", autotune=True)
+    costmodel.reset_cache_stats()
+    first = pipeline.compile(fn, x, options=opts)
+    stats1 = costmodel.reset_cache_stats()
+    assert stats1["measured"] >= 1      # a real search happened
+    second = pipeline.compile(fn, x, options=opts)
+    stats2 = costmodel.reset_cache_stats()
+    assert stats2["hits"] >= 1 and stats2["measured"] == 0
+    assert second.emit_cpp_source() == first.emit_cpp_source()
+    gemm = next(op for op in second.graph.ops if op.opname == "kk.gemm")
+    assert gemm.attrs["cost"]["source"] == "autotune"
+    assert "measured_us" in gemm.attrs["cost"]
+    np.testing.assert_allclose(second(x), first(x), rtol=1e-6)
+
+
+def test_autotuned_result_is_numerically_correct():
+    fn, x = _gemm_workload(m=96, k=64, n=64)
+    tuned = pipeline.compile(fn, x, options=CompileOptions(
+        target="loops", autotune=True))
+    plain = pipeline.compile(fn, x, options=CompileOptions(target="loops"))
+    np.testing.assert_allclose(np.asarray(tuned(x)), np.asarray(plain(x)),
+                               rtol=1e-5)
+
+
+def test_tune_cache_dir_option_overrides_env(tmp_path):
+    fn, x = _gemm_workload()
+    cdir = tmp_path / "explicit-cache"
+    pipeline.compile(fn, x, options=CompileOptions(
+        target="loops", autotune=True, tune_cache_dir=str(cdir)))
+    assert any(p.name.startswith("loops__kk_gemm__")
+               for p in cdir.iterdir())
+
+
+def test_json_tiling_round_trip():
+    from repro.core.costmodel import _json_tiling
+    t = {"block": (8, 128), "grid": (4, 1), "bm": 64,
+         "vectorize_batch": True}
+    back = _json_tiling(json.loads(json.dumps(
+        {k: (list(v) if isinstance(v, tuple) else v)
+         for k, v in t.items()})))
+    assert back == t and isinstance(back["vectorize_batch"], bool)
+
+
+# ---------------------------------------------------------------------------
+# IR visibility (satellite: the decision is recorded on the op)
+# ---------------------------------------------------------------------------
+
+def test_cost_attrs_visible_in_ir_and_cpp():
+    def fn(x):
+        return ops.relu(ops.matmul(x, ops.add(x, x)))
+
+    x = np.random.default_rng(0).standard_normal((64, 64)) \
+        .astype(np.float32)
+    mod = pipeline.compile(fn, x, options=CompileOptions(
+        target="loops", cost_model=True))
+    gemm = next(op for op in mod.graph.ops if op.opname == "kk.gemm")
+    assert gemm.attrs["cost"]["source"] == "model"
+    assert gemm.attrs["cost"]["predicted_us"] > 0
+    dump = str(mod.graph)
+    assert "cost=" in dump and "'source': 'model'" in dump
+    assert "cost={" in mod.emit_cpp_source()     # lapis-translate comment
+    # default compiles record the decision too, marked heuristic
+    mod2 = pipeline.compile(fn, x,
+                            options=CompileOptions(target="loops"))
+    gemm2 = next(op for op in mod2.graph.ops if op.opname == "kk.gemm")
+    assert gemm2.attrs["cost"]["source"] == "heuristic"
+
+
+def test_autotune_cli_flags_plumb_through(tmp_path, capsys):
+    from repro.core.pipeline import main as cli_main
+    assert cli_main(["--demo", "mlp", "--target", "loops",
+                     "--cost-model", "--print-ir"]) == 0
+    out = capsys.readouterr().out
+    assert "'source': 'model'" in out
