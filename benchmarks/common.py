@@ -1,12 +1,38 @@
-"""Shared timing helpers.  All paper-table benchmarks run CPU-scaled
-problem sizes (documented per bench); timings follow the paper's protocol:
-one untimed warm-up call, then the average over N repetitions (A.2)."""
+"""Shared timing helpers + the BENCH_*.json record schema.  All
+paper-table benchmarks run CPU-scaled problem sizes (documented per
+bench); timings follow the paper's protocol: one untimed warm-up call,
+then the average over N repetitions (A.2).
+
+Record schema
+-------------
+Benchmarks that persist a ``BENCH_*.json`` build it with
+:func:`bench_record`, which stamps the measurement context a perf
+number is meaningless without:
+
+* ``machine``   — host fingerprint (:func:`machine_fingerprint`):
+  platform, python/jax versions, jax device backend, CPU count;
+* ``workload``  — the generator parameters (sizes, seeds, rates), so
+  the run is reproducible;
+* ``results``   — per-backend measurements; repeated measurements go
+  through :func:`stats_over_repeats` (n / median / min / max) rather
+  than a bare point estimate.
+
+:func:`check_record` validates a loaded record against this shape (plus
+per-bench required fields) and is exposed as a CLI so CI can schema-check
+committed and artifact records::
+
+    PYTHONPATH=src python -m benchmarks.common --check BENCH_serve.json
+"""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
-from typing import Callable
+from typing import Callable, Dict, Iterable, List
 
 import jax
+import numpy as np
 
 
 def time_fn(fn: Callable, *args, reps: int = 20) -> float:
@@ -22,3 +48,121 @@ def time_fn(fn: Callable, *args, reps: int = 20) -> float:
 
 def row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json record schema
+# ---------------------------------------------------------------------------
+
+def machine_fingerprint() -> Dict:
+    """Host context a perf record is meaningless without."""
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "device": jax.default_backend(),
+        "cpus": os.cpu_count(),
+    }
+
+
+def stats_over_repeats(samples: Iterable[float]) -> Dict:
+    """Repeated measurements → {n, median, min, max} (no bare points)."""
+    a = np.asarray(list(samples), dtype=float)
+    if a.size == 0:
+        raise ValueError("stats_over_repeats needs >= 1 sample")
+    return {"n": int(a.size), "median": float(np.median(a)),
+            "min": float(a.min()), "max": float(a.max())}
+
+
+def latency_percentiles_ms(samples_ms: Iterable[float]) -> Dict:
+    """Pooled per-token latencies (ms) → {n, p50, p99}."""
+    a = np.asarray(list(samples_ms), dtype=float)
+    if a.size == 0:
+        raise ValueError("latency_percentiles_ms needs >= 1 sample")
+    return {"n": int(a.size), "p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99))}
+
+
+def bench_record(bench: str, *, workload: Dict, results: Dict,
+                 smoke: bool = False, **extra) -> Dict:
+    """Assemble a schema-complete record (see module docstring)."""
+    rec = {"bench": bench, "smoke": bool(smoke),
+           "machine": machine_fingerprint(),
+           "workload": workload, "results": results}
+    rec.update(extra)
+    return rec
+
+
+def _check_serve(rec: Dict, problems: List[str]) -> None:
+    for target, policies in rec.get("results", {}).items():
+        for policy in ("continuous", "static"):
+            entry = policies.get(policy)
+            if not isinstance(entry, dict):
+                problems.append(f"results[{target}] missing policy "
+                                f"'{policy}'")
+                continue
+            stats = entry.get("tok_per_s")
+            if not (isinstance(stats, dict)
+                    and {"n", "median", "min", "max"} <= stats.keys()):
+                problems.append(
+                    f"results[{target}][{policy}].tok_per_s must be "
+                    "stats_over_repeats-shaped")
+            lat = entry.get("latency_ms")
+            if not (isinstance(lat, dict)
+                    and {"p50", "p99"} <= lat.keys()):
+                problems.append(
+                    f"results[{target}][{policy}].latency_ms must carry "
+                    "p50/p99")
+    pvc = rec.get("paged_vs_contiguous")
+    if not isinstance(pvc, dict):
+        problems.append("serve record missing 'paged_vs_contiguous'")
+    elif not isinstance(pvc.get("token_parity"), bool):
+        problems.append("paged_vs_contiguous.token_parity must be a bool")
+
+
+_BENCH_CHECKS = {"serve": _check_serve}
+
+
+def check_record(rec: Dict) -> List[str]:
+    """→ list of schema problems (empty = valid)."""
+    problems: List[str] = []
+    for k in ("bench", "machine", "workload", "results"):
+        if k not in rec:
+            problems.append(f"missing top-level key '{k}'")
+    machine = rec.get("machine", {})
+    if not isinstance(machine, dict):
+        problems.append("'machine' must be a dict")
+    else:
+        for k in ("platform", "python", "jax", "device"):
+            if k not in machine:
+                problems.append(f"machine fingerprint missing '{k}'")
+    if not isinstance(rec.get("workload", {}), dict):
+        problems.append("'workload' must be a dict")
+    extra = _BENCH_CHECKS.get(rec.get("bench"))
+    if extra and not problems:
+        extra(rec, problems)
+    return problems
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        description="schema-check a BENCH_*.json record")
+    p.add_argument("--check", metavar="PATH", required=True,
+                   help="record file to validate")
+    args = p.parse_args(argv)
+    with open(args.check) as f:
+        rec = json.load(f)
+    problems = check_record(rec)
+    if problems:
+        for msg in problems:
+            print(f"SCHEMA: {msg}")
+        return 1
+    print(f"{args.check}: ok (bench={rec['bench']}, "
+          f"device={rec['machine']['device']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -103,12 +103,20 @@ def _workloads(rng, smoke: bool):
 
 
 def _measure_pair(fn, example, target, reps, rounds):
-    """Compile fused + unfused and time them with interleaved rounds."""
+    """Compile fused + unfused + cost-gated, time with interleaved
+    rounds.  ``cost_gated`` lets the cost model decide per fusion pair
+    (``cost_model=True``) — on backends whose hierarchy declares a zero
+    launch overhead the gate rejects every fusion and the compile is the
+    unfused program by construction."""
     from repro.core import pipeline
     from repro.core.options import CompileOptions
-    mods = {variant: pipeline.compile(fn, *example, options=CompileOptions(
-                target=target, fuse_elementwise=(variant == "fused")))
-            for variant in ("fused", "unfused")}
+    opts = {
+        "fused": CompileOptions(target=target),
+        "unfused": CompileOptions(target=target, fuse_elementwise=False),
+        "cost_gated": CompileOptions(target=target, cost_model=True),
+    }
+    mods = {variant: pipeline.compile(fn, *example, options=o)
+            for variant, o in opts.items()}
     # unjitted first: it seeds the DualView weight caches with concrete
     # arrays (running the jit trace first would cache tracers instead)
     dispatch = _paired_stats(
@@ -140,18 +148,31 @@ def main(print_rows=True, targets=None, smoke=False, out=None):
         for target in targets:
             pair = _measure_pair(fn, example, target, reps, rounds)
             fused, unfused = pair["fused"], pair["unfused"]
+            gated = pair["cost_gated"]
+            gated["parity_vs_unfused"] = round(
+                gated["wall_us"] / unfused["wall_us"], 4)
             wl[target] = pair
-            rows.append(row(
-                f"fusion/{name}/{target}/fused", fused["wall_us"],
-                f"launches={fused['launches']} "
-                f"iqr_us={fused['wall_iqr_us']:.1f} "
-                f"dispatch_us={fused['dispatch_us']:.1f}"))
-            rows.append(row(
-                f"fusion/{name}/{target}/unfused",
-                unfused["wall_us"],
-                f"launches={unfused['launches']} "
-                f"iqr_us={unfused['wall_iqr_us']:.1f} "
-                f"dispatch_us={unfused['dispatch_us']:.1f}"))
+            for variant in ("fused", "unfused", "cost_gated"):
+                v = pair[variant]
+                rows.append(row(
+                    f"fusion/{name}/{target}/{variant}", v["wall_us"],
+                    f"launches={v['launches']} "
+                    f"iqr_us={v['wall_iqr_us']:.1f} "
+                    f"dispatch_us={v['dispatch_us']:.1f}"))
+            if smoke:
+                # gated must achieve >= parity with unfused: on a zero-
+                # launch-overhead hierarchy (xla, loops) the gate rejects
+                # every fusion, so the program IS the unfused one —
+                # assert the construction, not a noisy wall-time race
+                from repro.core.costmodel import CostModel
+                from repro.core.options import CompileOptions
+                hier = CompileOptions(target=target).backend().hierarchy
+                if CostModel(hier).launch_overhead <= 1e-7:
+                    assert gated["launches"] == unfused["launches"], \
+                        (name, target, pair)
+                else:
+                    assert gated["wall_us"] <= 1.5 * unfused["wall_us"], \
+                        (name, target, pair)
     if print_rows:
         print("\n".join(rows))
     if out:

@@ -46,9 +46,9 @@ from typing import Callable, Optional, Sequence
 # backends collapse nests to fused ``kk.*``-style calls, loop backends get
 # physical level bindings).  The seed kept two hand-maintained pipelines
 # (TENSOR vs LOWERED) to encode that difference structurally.
-DEFAULT_PIPELINE = ("fuse_elementwise", "sparsify", "linalg_to_library",
-                    "linalg_to_parallel", "map_parallelism",
-                    "memory_space_management")
+DEFAULT_PIPELINE = ("fuse_elementwise", "sparsify", "paged_to_kokkos",
+                    "linalg_to_library", "linalg_to_parallel",
+                    "map_parallelism", "memory_space_management")
 
 
 # ---------------------------------------------------------------------------

@@ -96,6 +96,13 @@ def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
             return lambda *a, _fn=fn, _t=tiling: _fn(*a, tiling=_t,
                                                      **_op_kwargs(op))
         return lambda *a, _fn=fn: _fn(*a, **_op_kwargs(op))
+    if op.opname in ("kokkos.page_gather", "kokkos.page_append"):
+        # paged-KV cache plumbing dispatches through the registry like
+        # kk.* library calls; the nest/tiling attrs describe the mapped
+        # loop structure the backend implementation realizes
+        fn = registry.dispatch(op.opname, options)
+        bs = int(op.attrs["block_size"])
+        return lambda *a, _fn=fn, _bs=bs: _fn(*a, block_size=_bs)
     if op.opname in ("kokkos.range_parallel", "kokkos.team_parallel"):
         if op.attrs.get("collapse"):
             # library mapping: the whole nest is one fused kk.*-style
@@ -303,6 +310,12 @@ def _src_line(op: Op, names: dict) -> str:
     if op.opname == "linalg.batch_norm":
         return (f"{res} = _batch_norm({', '.join(a)}, "
                 f"eps={at.get('eps', 1e-5)!r})")
+    if op.opname in ("paged.gather", "kokkos.page_gather"):
+        return (f"{res} = _page_gather({a[0]}, {a[1]}, {a[2]}, "
+                f"{at['block_size']!r})")
+    if op.opname in ("paged.append", "kokkos.page_append"):
+        return (f"{res} = _page_append({a[0]}, {a[1]}, {a[2]}, {a[3]}, "
+                f"{at['block_size']!r})")
     if op.opname == "linalg.max_pool2d":
         return (f"{res} = jax.lax.reduce_window({a[0]}, -jnp.inf, "
                 f"jax.lax.max, {(1, 1) + tuple(at['window'])!r}, "
@@ -396,6 +409,27 @@ def _spmm(a, b):
         jnp.zeros(val.shape[0], jnp.int32).at[ip[1:-1]].add(1))
     return jax.ops.segment_sum(val[:, None] * b[ind], row_ids,
                                num_segments=n_rows)
+
+
+def _page_gather(pool, table, lengths, block_size):
+    """Assemble each slot's contiguous KV view from its page-table blocks
+    (kokkos.page_gather; stale positions past `lengths` are masked by the
+    consuming attention kernel)."""
+    n_slots, blocks_per_slot = table.shape
+    g = jnp.take(pool, table.reshape(-1), axis=0)
+    g = g.reshape((n_slots, blocks_per_slot) + pool.shape[1:])
+    g = jnp.moveaxis(g, 1, 2)
+    return g.reshape(n_slots, pool.shape[1],
+                     blocks_per_slot * pool.shape[2], pool.shape[3])
+
+
+def _page_append(pool, table, lengths, kv, block_size):
+    """Write one new KV position per slot into its current tail block
+    (kokkos.page_append)."""
+    rows = jnp.arange(table.shape[0])
+    blk = table[rows, lengths // block_size]
+    off = lengths % block_size
+    return pool.at[blk, :, off, :].set(kv)
 
 
 def _batch_norm(x, s, b, m, v, *, eps):

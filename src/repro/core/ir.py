@@ -401,11 +401,18 @@ LINALG_SHAPE = {"tensor.reshape", "tensor.transpose", "tensor.slice",
                 "tensor.constant", "tensor.pad", "tensor.gather"}
 KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv", "kk.spmm",
           "kk.attention", "kk.rwkv6_scan", "kk.rglru_scan", "kk.conv2d"}
+# Block-paged KV-cache ops (the serving engine's cache plumbing).  The
+# tensor-level forms are backend-neutral; ``paged_to_kokkos`` lowers them
+# to the kokkos.* dialect with a logical nest + level map + SCRATCH-typed
+# staging, so the paged decode step is IR all the way down (never an
+# opaque Python closure).
+PAGED_OPS = {"paged.gather", "paged.append"}
+KOKKOS_PAGED_OPS = {"kokkos.page_gather", "kokkos.page_append"}
 # The hierarchical parallel dialect: logical nests awaiting (or carrying)
 # a per-backend level mapping, the IR-visible fused-elementwise region op
 # (its body is a Region of sub-op records, not a closure), plus the
 # memory-space coherence ops.
 KOKKOS_PARALLEL_OPS = {"kokkos.range_parallel", "kokkos.team_parallel"}
 KOKKOS_FUSED = "kokkos.fused"
-KOKKOS_OPS = KOKKOS_PARALLEL_OPS | {KOKKOS_FUSED, "kokkos.sync",
-                                    "kokkos.modify"}
+KOKKOS_OPS = KOKKOS_PARALLEL_OPS | KOKKOS_PAGED_OPS | \
+    {KOKKOS_FUSED, "kokkos.sync", "kokkos.modify"}

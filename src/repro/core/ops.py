@@ -342,6 +342,105 @@ def spmm_csr(indptr, indices, values, b, *, n_rows: int,
          "max_nnz_row": max_nnz_row})
 
 
+# ---------------------------------------------------------------------------
+# block-paged KV cache (paged.* — lowered by the `paged_to_kokkos` pass)
+#
+# The serving engine's cache plumbing goes through the pipeline like every
+# other kernel: tracing emits backend-neutral paged.* ops (a shared block
+# pool, a per-slot page table, per-slot lengths), `paged_to_kokkos` lowers
+# them to kokkos.page_gather / kokkos.page_append with a logical nest +
+# level map + SCRATCH-typed staging, and the emitter dispatches them
+# through the backend kernel table.  Eager calls (the jitted decode step)
+# compile exactly that one-op graph, memoized per shape/options — the
+# same no-bypass discipline as the sparse ops above.
+# ---------------------------------------------------------------------------
+
+_PAGED_PIPELINE_CACHE: dict = {}
+
+
+def _page_gather_ref(block_size: int):
+    def ref(pool, table, lengths):
+        n_slots, blocks_per_slot = table.shape
+        g = jnp.take(pool, table.reshape(-1), axis=0)
+        g = g.reshape((n_slots, blocks_per_slot) + pool.shape[1:])
+        g = jnp.moveaxis(g, 1, 2)          # (S, H, MB, bs, d)
+        return g.reshape(n_slots, pool.shape[1],
+                         blocks_per_slot * pool.shape[2], pool.shape[3])
+    return ref
+
+
+def _page_append_ref(block_size: int):
+    def ref(pool, table, lengths, kv):
+        rows = jnp.arange(table.shape[0])
+        blk = table[rows, lengths // block_size]
+        off = lengths % block_size
+        return pool.at[blk, :, off, :].set(kv)
+    return ref
+
+
+def _paged_via_pipeline(opname: str, arrays: tuple, kwargs: dict):
+    """Eager paged-cache execution = compile the one-op graph through the
+    full pipeline for the ambient backend (memoized, like sparse)."""
+    import dataclasses
+
+    from repro.core.options import current_options
+    options = current_options()
+    specs = tuple(jax.ShapeDtypeStruct(a.shape, jnp.dtype(a.dtype))
+                  for a in arrays)
+    key = (opname,
+           tuple((s.shape, s.dtype.name) for s in specs),
+           tuple(sorted(kwargs.items())),
+           dataclasses.astuple(options), options.resolve_interpret())
+    mod = _PAGED_PIPELINE_CACHE.get(key)
+    if mod is None:
+        from repro.core import pipeline as pipeline_mod
+        builder = page_gather if opname == "paged.gather" else page_append
+
+        def paged_fn(*args):
+            return builder(*args, **kwargs)
+
+        mod = pipeline_mod.compile(paged_fn, *specs, options=options,
+                                   name=opname.replace(".", "_"))
+        _PAGED_PIPELINE_CACHE[key] = mod
+    return mod(*arrays)
+
+
+def page_gather(pool, table, lengths, *, block_size: int):
+    """Gather a slot-contiguous KV view from a block-paged pool.
+
+    ``pool``: (n_blocks, heads, block_size, head_dim) shared block pool;
+    ``table``: (n_slots, blocks_per_slot) int32 page table (block ids);
+    ``lengths``: (n_slots,) int32 valid prefix per slot.  Returns
+    (n_slots, heads, blocks_per_slot*block_size, head_dim); positions at
+    or past ``lengths`` are stale pool contents the consumer must mask
+    (``decode_attention`` does, per row).
+    """
+    block_size = int(block_size)
+    ref = _page_gather_ref(block_size)
+    if tracing():
+        return emit("paged.gather", [pool, table, lengths], ref,
+                    attrs={"block_size": block_size})
+    return _paged_via_pipeline("paged.gather", (pool, table, lengths),
+                               {"block_size": block_size})
+
+
+def page_append(pool, table, lengths, kv, *, block_size: int):
+    """Append one token's KV per slot into the paged pool.
+
+    ``kv``: (n_slots, heads, head_dim) written at each slot's position
+    ``lengths[s]`` — block ``table[s, lengths[s] // block_size]``, offset
+    ``lengths[s] % block_size``.  Returns the updated pool (functional,
+    like every tensor op; the jitted serving step donates the buffer).
+    """
+    block_size = int(block_size)
+    ref = _page_append_ref(block_size)
+    if tracing():
+        return emit("paged.append", [pool, table, lengths, kv], ref,
+                    attrs={"block_size": block_size})
+    return _paged_via_pipeline("paged.append", (pool, table, lengths, kv),
+                               {"block_size": block_size})
+
+
 def conv2d(x, w, *, stride=(1, 1), padding="SAME"):
     """NCHW conv (ResNet frontends). Lowered to lax.conv (the XLA library
     path) — the TPU analogue of calling cuDNN from Kokkos Kernels."""

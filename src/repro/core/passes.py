@@ -13,21 +13,26 @@ Pass order (mirrors the paper's pipeline; one pipeline for every backend):
                                  allow) and lower ``linalg.spmv_csr``/
                                  ``linalg.spmm_csr`` to ``kk.spmv``/
                                  ``kk.spmm`` with §4.2 tiling.
-3. ``linalg_to_library``         [linalg-to-kokkoskernels] matmul/gemv →
+3. ``paged_to_kokkos``           [beyond paper] serving-engine paged-KV
+                                 cache ops (``paged.gather``/``paged.append``)
+                                 → ``kokkos.page_*`` with nest/level_map/
+                                 tiling attrs and a SCRATCH-typed block
+                                 pool.
+4. ``linalg_to_library``         [linalg-to-kokkoskernels] matmul/gemv →
                                  ``kk.*`` library-call ops.
-4. ``linalg_to_parallel``        [dense-linalg-to-parallel-loops] remaining
+5. ``linalg_to_parallel``        [dense-linalg-to-parallel-loops] remaining
                                  dense ops → *logical* ``kokkos.*`` nests:
                                  the §4.2 decision table (depth 1 → range,
                                  2 → team+vector, ≥3 → league+team+vector),
                                  no hardware names anywhere.
-5. ``map_parallelism``           [kokkos-loop-mapping] bind each logical
+6. ``map_parallelism``           [kokkos-loop-mapping] bind each logical
                                  nest and each ``kk.*`` op to the backend's
                                  declared ParallelHierarchy: physical level
                                  names, exec space, and heuristic block
                                  shapes (team-size / vector-length).
                                  Library backends collapse nests to fused
                                  ``kk.*``-style calls instead.
-6. ``memory_space_management``   [kokkos-dualview-management] assign memory
+7. ``memory_space_management``   [kokkos-dualview-management] assign memory
                                  spaces to every value and insert the lazy
                                  ``kokkos.sync`` / ``kokkos.modify`` ops.
 """
@@ -273,6 +278,89 @@ def sparsify(graph: Graph,
                         "level_map": hier.map_levels(nest)})
         new_ops.append(new)
         graph.replace_op(op, new_ops, dict(zip(op.results, new.results)))
+        rewritten += 1
+    return rewritten
+
+
+# ---------------------------------------------------------------------------
+# 2b. paged_to_kokkos (the serving engine's cache ops)
+# ---------------------------------------------------------------------------
+
+_PAGED_TO_KOKKOS = {
+    "paged.gather": "kokkos.page_gather",
+    "paged.append": "kokkos.page_append",
+}
+
+
+@register_pass(
+    reads="paged.gather / paged.append over a shared KV block pool + per-slot page table",
+    writes="kokkos.page_gather / kokkos.page_append with nest, level_map, tiling, cost; SCRATCH-typed block pool")
+def paged_to_kokkos(graph: Graph,
+                    options: Optional[CompileOptions] = None) -> int:
+    """Lower the block-paged KV-cache ops to the ``kokkos.*`` dialect.
+
+    The serving engine's page-table gather and per-token append are
+    ordinary compiled kernels, not host Python: each ``paged.*`` op
+    becomes a ``kokkos.page_*`` op carrying (i) a *logical* nest —
+    league over cache slots, team over the blocks (gather) or heads
+    (append) a slot touches, vector over the contiguous head dim; (ii)
+    the physical ``level_map``/``exec_space`` binding from the backend's
+    declared :class:`~repro.core.backend.ParallelHierarchy`, exactly like
+    ``map_parallelism`` binds dense nests; (iii) a ``tiling`` record
+    charging staged blocks against the hierarchy's ``scratch_bytes``
+    (``blocks_per_team`` = how many fixed-size KV blocks fit the fast
+    tier at once) — which is why the shared block pool operand is typed
+    ``MemorySpace.SCRATCH``: pool blocks are the staging unit of the
+    paged decode step, sized by the pass to fit the scratch budget, and
+    the memory-space machinery from the DualView framework records that
+    in the type system.  The emitter dispatches the lowered ops through
+    the backend kernel table (``kernels/paged_kv.py``), so
+    ``--print-ir-after-all`` shows structured IR and never an opaque
+    Python closure."""
+    options = options or current_options()
+    from repro.core.costmodel import CostModel
+    hier = options.resolve_hierarchy()
+    model = CostModel(hier)
+    source = "model" if options.resolve_cost_model() else "heuristic"
+    rewritten = 0
+    for op in list(graph.ops):
+        kk = _PAGED_TO_KOKKOS.get(op.opname)
+        if kk is None:
+            continue
+        pool, table = op.operands[0], op.operands[1]
+        n_blocks, heads, bs, hd = pool.type.shape
+        n_slots, blocks_per_slot = table.type.shape
+        itemsize = dtype_itemsize(pool.type.dtype)
+        block_bytes = heads * bs * hd * itemsize
+        # fixed-size blocks from the shared pool are the staging unit —
+        # typed with the SCRATCH space machinery; the tiling bounds how
+        # many a team stages in the fast tier at once
+        pool.type = pool.type.with_space(MemorySpace.SCRATCH)
+        blocks_per_team = max(
+            1, min(blocks_per_slot,
+                   hier.scratch_bytes // max(2 * block_bytes, 1) or 1))
+        tiling = {"blocks_per_team": blocks_per_team,
+                  "block_bytes": block_bytes}
+        if kk == "kokkos.page_gather":
+            nest = (LoopLevel("league", n_slots),
+                    LoopLevel("team", blocks_per_slot),
+                    LoopLevel("vector", hd))
+            moved = 2 * n_slots * blocks_per_slot * block_bytes
+        else:
+            nest = (LoopLevel("league", n_slots),
+                    LoopLevel("team", heads),
+                    LoopLevel("vector", hd))
+            moved = 2 * n_slots * heads * hd * itemsize
+        pred = model.roofline(bytes_moved=float(moved), flops=0.0,
+                              launches=1)
+        new = Op(kk, op.operands, [r.type for r in op.results],
+                 attrs={**op.attrs, "nest": nest, "tiling": tiling,
+                        "exec_space": hier.exec_space,
+                        "level_map": hier.map_levels(
+                            tuple(lv.name for lv in nest)),
+                        "cost": {"predicted_us": round(pred * 1e6, 3),
+                                 "source": source}})
+        graph.replace_op(op, [new], dict(zip(op.results, new.results)))
         rewritten += 1
     return rewritten
 

@@ -157,16 +157,47 @@ def _demo_spmv():
     return spmv, specs, example
 
 
-_DEMOS = {"mlp": _demo_mlp, "spmv": _demo_spmv}
+def _demo_paged():
+    """The serving engine's paged decode-step cache plumbing: append one
+    new KV position per slot into its page-table tail block, then gather
+    each slot's contiguous view from the shared pool (lowered by the
+    `paged_to_kokkos` pass — the IR dump shows kokkos.page_append /
+    kokkos.page_gather with a #scratch-typed block pool)."""
+    import numpy as np
+
+    from repro.core import ops
+    rng = np.random.default_rng(0)
+    n_blocks, heads, bs, hd, n_slots, mb = 17, 2, 8, 16, 4, 4
+
+    def paged_step(pool, table, lengths, kv):
+        pool2 = ops.page_append(pool, table, lengths, kv, block_size=bs)
+        return ops.page_gather(pool2, table, lengths, block_size=bs)
+
+    specs = (jax.ShapeDtypeStruct((n_blocks, heads, bs, hd), "float32"),
+             jax.ShapeDtypeStruct((n_slots, mb), "int32"),
+             jax.ShapeDtypeStruct((n_slots,), "int32"),
+             jax.ShapeDtypeStruct((n_slots, heads, hd), "float32"))
+    example = (rng.standard_normal((n_blocks, heads, bs, hd))
+               .astype(np.float32),
+               rng.integers(1, n_blocks, (n_slots, mb)).astype(np.int32),
+               np.array([5, 0, 17, 30], np.int32),
+               rng.standard_normal((n_slots, heads, hd)).astype(np.float32))
+    return paged_step, specs, example
+
+
+_DEMOS = {"mlp": _demo_mlp, "spmv": _demo_spmv, "paged": _demo_paged}
 
 
 _CLI_EPILOG = """\
-the two demos (--demo):
+the demos (--demo):
   mlp    dense 2-layer MLP: matmul -> fused bias+relu region -> matmul ->
          softmax (shows kokkos.fused, TeamPolicy nests, DualView syncs)
   spmv   y = relu(A @ x), A a CSR sparse composite value (shows
          sparse.pack, CSR->ELL sparse.convert on ell-layout backends,
          the kk.spmv row-loop kernel)
+  paged  serving-engine paged KV-cache step: page_append then page_gather
+         over a shared block pool (shows kokkos.page_* ops with nest/
+         level_map/tiling attrs and the #scratch-typed pool)
 
 translation outputs:
   --emit PATH       freestanding *Python* module, weights embedded as a

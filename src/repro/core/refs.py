@@ -127,6 +127,12 @@ def op_ref(opname: str, attrs: dict) -> Callable:
         return _batch_norm_ref(attrs)
     if opname == "linalg.max_pool2d":
         return _max_pool_ref(attrs)
+    if opname in ("paged.gather", "kokkos.page_gather"):
+        from repro.core.ops import _page_gather_ref
+        return _page_gather_ref(attrs["block_size"])
+    if opname in ("paged.append", "kokkos.page_append"):
+        from repro.core.ops import _page_append_ref
+        return _page_append_ref(attrs["block_size"])
     if opname in ("linalg.map",):
         return attrs["fn"]
     raise KeyError(f"no reference semantics for {opname}")

@@ -38,25 +38,32 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     length = len_ref[0, 0]
-    q = q_ref[0].astype(jnp.float32)                 # (rep, D)
-    k = k_ref[0].astype(jnp.float32)                 # (bs, D)
-    v = v_ref[0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = pos < length
-    if window is not None:
-        valid &= pos >= length - window
-    s = jnp.where(valid, s, NEG_INF)
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+
+    # skip KV blocks wholly past this row's valid prefix: with ragged
+    # per-row lengths (continuous batching / paged slots) short rows
+    # would otherwise burn the full sweep on all-masked blocks — and an
+    # all-invalid row (length 0) now correctly leaves l at 0
+    @pl.when(ki * bs < length)
+    def _update():
+        q = q_ref[0].astype(jnp.float32)             # (rep, D)
+        k = k_ref[0].astype(jnp.float32)             # (bs, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = pos < length
+        if window is not None:
+            valid &= pos >= length - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(ki == kv_steps - 1)
     def _finish():

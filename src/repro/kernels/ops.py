@@ -26,6 +26,7 @@ from repro.kernels import ref
 from repro.kernels import batched_gemm as _bg
 from repro.kernels import flash_attention as _fa
 from repro.kernels import matmul as _mm
+from repro.kernels import paged_kv as _pk  # noqa: F401  (registers kokkos.page_*)
 from repro.kernels import rglru as _rg
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import rwkv6 as _rw

@@ -1,0 +1,128 @@
+"""Block-paged KV-cache kernels (``kokkos.page_gather`` / ``kokkos.page_append``).
+
+The serving engine keeps each sequence's KV history in fixed-size blocks
+drawn from a shared pool; a per-slot page table names the blocks in
+order.  ``paged_to_kokkos`` lowers the tensor-level ``paged.*`` ops to
+the ``kokkos.*`` dialect and the emitter dispatches them here through the
+backend registry, so the paged decode step is compiled IR end to end —
+this module is the backend *implementation* of those ops, never the IR's
+meaning (that lives in ``repro.core.refs``).
+
+Layouts:
+
+* pool    — ``(n_blocks, Hkv, block_size, hd)``; block 0 is the scrap
+            block inactive slots write into (their table rows are all
+            zero), so every slot's append is unconditional.
+* table   — ``(n_slots, max_blocks)`` int32 block ids.
+* lengths — ``(n_slots,)`` int32 valid positions per slot; stale data
+            past a slot's length is masked by the consuming decode-
+            attention kernel, so gather never needs to zero it.
+
+Three implementations per op, mirroring the rest of the kernel surface:
+``xla`` (vendor-library gather/scatter), ``loops`` (explicit serial
+league loop over slots — the generated-Kokkos-loops reading of the nest
+attrs), and for the gather a hand-written Pallas kernel whose grid walks
+(slot, block) and uses the *scalar-prefetched page table* as the pool
+index map — the vLLM-style paged-attention gather.  The pallas append
+intentionally falls back to the library scatter via the fallback chain
+(a one-position scatter is a library strength; a hand kernel would
+round-trip the whole pool).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.backend import register_kernel
+
+
+# ---------------------------------------------------------------------------
+# xla — the vendor-library path
+# ---------------------------------------------------------------------------
+
+def page_gather_xla(pool, table, lengths, *, block_size):
+    n_slots, blocks_per_slot = table.shape
+    g = jnp.take(pool, table.reshape(-1), axis=0)
+    g = g.reshape((n_slots, blocks_per_slot) + pool.shape[1:])
+    g = jnp.moveaxis(g, 1, 2)
+    return g.reshape(n_slots, pool.shape[1],
+                     blocks_per_slot * pool.shape[2], pool.shape[3])
+
+
+def page_append_xla(pool, table, lengths, kv, *, block_size):
+    rows = jnp.arange(table.shape[0])
+    blk = table[rows, lengths // block_size]
+    off = lengths % block_size
+    return pool.at[blk, :, off, :].set(kv.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
+# loops — explicit league loop over slots (the nest attrs, interpreted)
+# ---------------------------------------------------------------------------
+
+def page_gather_loops(pool, table, lengths, *, block_size):
+    n_slots, blocks_per_slot = table.shape
+    rows = []
+    for s in range(n_slots):                 # league loop over slots
+        blocks = jnp.take(pool, table[s], axis=0)   # (MB, Hkv, bs, hd)
+        rows.append(jnp.moveaxis(blocks, 0, 1).reshape(
+            pool.shape[1], blocks_per_slot * pool.shape[2], pool.shape[3]))
+    return jnp.stack(rows)
+
+
+def page_append_loops(pool, table, lengths, kv, *, block_size):
+    for s in range(table.shape[0]):          # league loop over slots
+        blk = table[s, lengths[s] // block_size]
+        off = lengths[s] % block_size
+        pool = jax.lax.dynamic_update_slice(
+            pool, kv[s][None, :, None, :].astype(pool.dtype),
+            (blk, 0, off, 0))
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# pallas — page-table-indexed gather (scalar-prefetched block ids)
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(table_ref, pool_ref, o_ref):
+    # the index maps did the paging: this program's pool block IS the
+    # (slot, block)-th page — copy it into the slot's contiguous view
+    o_ref[...] = pool_ref[...]
+
+
+def page_gather_pallas(pool, table, lengths, *, block_size,
+                       interpret=False):
+    n_blocks, heads, bs, hd = pool.shape
+    n_slots, blocks_per_slot = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_slots, blocks_per_slot),
+        in_specs=[
+            # the page table rides as a scalar-prefetch operand so the
+            # *input index map* can read it: program (s, b) pulls pool
+            # block table[s, b] — the paged indirection happens in the
+            # block fetch, not in kernel arithmetic
+            pl.BlockSpec((1, heads, bs, hd),
+                         lambda s, b, table_ref: (table_ref[s, b], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, heads, bs, hd),
+                               lambda s, b, table_ref: (s, 0, b, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_slots, heads, blocks_per_slot * bs, hd), pool.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pool)
+
+
+register_kernel("kokkos.page_gather", "xla", page_gather_xla)
+register_kernel("kokkos.page_append", "xla", page_append_xla)
+register_kernel("kokkos.page_gather", "loops", page_gather_loops)
+register_kernel("kokkos.page_append", "loops", page_append_loops)
+register_kernel("kokkos.page_gather", "pallas", page_gather_pallas)
+# no pallas page_append on purpose: the fallback chain routes it to the
+# xla scatter (see module docstring)

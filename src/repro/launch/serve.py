@@ -1,27 +1,45 @@
-"""Serving entry point: batched continuous decode.
+"""Serving entry point: continuous batching over a block-paged KV cache.
 
-A minimal production shape: a request pool fills a fixed batch of decode
-slots; prefill runs per request batch, decode steps run lock-step over the
-batch; finished slots are refilled (continuous batching).  Supports int8
-KV-cache quantization (--quantized-kv) — the knob that fits the 32k×128
-decode cells on one pod (EXPERIMENTS.md §Perf).
+The engine (:func:`serve_paged`) replaces the seed's fixed-wave loop:
+
+* a request queue with **continuous (in-flight) batching** — finished
+  decode slots are refilled every step, ragged prompt lengths allowed;
+* a **block-paged KV cache**: per-slot page tables over a shared pool of
+  fixed-size blocks, freed on request completion.  The page gather /
+  append steps are ``kokkos.*`` IR compiled through the pipeline
+  (``paged_to_kokkos`` pass), never host Python;
+* **prefill/decode disaggregation** — prefill is compiled separately
+  (per prompt length) and admission is bounded by
+  ``--max-prefill-per-step`` so bursts cannot stall the decode loop;
+* an **async dispatch loop**: each decode step is dispatched, host-side
+  arrival scanning/scheduling runs while the device computes, and
+  ``jax.block_until_ready`` fences only the token readback.
+
+The seed's lock-step wave loop survives as ``--policy static`` (and the
+contiguous-cache path as ``generate``/``serve_loop``) so the two can be
+benchmarked side by side (benchmarks/serve_bench.py → BENCH_serve.json).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-      --requests 8 --batch 4 --prompt-len 16 --gen-len 16
+      --requests 8 --slots 4 --prompt-len 16 --gen-len 16 --paged
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.options import CompileOptions, use_options
 from repro.launch import steps as steps_mod
+from repro.models import serve as serve_mod
 from repro.models.model import build_model
+from repro.runtime.scheduler import (BlockAllocator, ContinuousScheduler,
+                                     Request, poisson_arrivals)
 
 
 def generate(model, params, prompts: np.ndarray, *, gen_len: int,
@@ -99,23 +117,285 @@ def serve_loop(model, params, *, n_requests: int, batch: int,
             "tok_per_s": tokens_out / max(dt, 1e-9)}
 
 
+# ---------------------------------------------------------------------------
+# the serving engine: continuous batching over the block-paged KV cache
+# ---------------------------------------------------------------------------
+
+def make_requests(n: int, *, prompt_len: int, gen_len: int, vocab: int,
+                  seed: int = 0, ragged: bool = False,
+                  arrival_rate: Optional[float] = None) -> List[Request]:
+    """Synthetic request set.  ``ragged`` draws per-request prompt and
+    generation lengths from [1, prompt_len] / [1, gen_len]; a Poisson
+    ``arrival_rate`` (requests/s) staggers arrivals, else all arrive at
+    t=0."""
+    rng = np.random.default_rng(seed)
+    arrivals = (poisson_arrivals(n, arrival_rate, rng)
+                if arrival_rate else [0.0] * n)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(1, prompt_len + 1)) if ragged else prompt_len
+        glen = int(rng.integers(1, gen_len + 1)) if ragged else gen_len
+        prompt = rng.integers(1, vocab, plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, gen_len=glen,
+                            arrival=arrivals[i]))
+    return reqs
+
+
+def _engine_fns(model, block_size: int, quantized: bool,
+                options: CompileOptions) -> dict:
+    """Per-(model, geometry, backend) compiled-program cache.
+
+    Repeated :func:`serve_paged` calls (benchmark repeats, tests) reuse
+    the jitted decode / prefill-scatter programs — and the per-prompt-
+    length prefill programs of the disaggregated prefill path — instead
+    of re-jitting a cold engine every call.  The backend options are part
+    of the key: the paged ops inside ``decode`` lower through the
+    pipeline at jax-trace time, so a program traced under one target
+    must never be replayed under another.
+    """
+    cache = model.__dict__.setdefault("_paged_jit_cache", {})
+    key = (block_size, quantized, dataclasses.astuple(options))
+    fns = cache.get(key)
+    if fns is None:
+        fns = {
+            "decode": jax.jit(
+                lambda p, t, c, tb, ln: model.paged_decode_step(
+                    p, t, c, tb, ln, block_size=block_size),
+                donate_argnums=(2,)),
+            "scatter": jax.jit(
+                lambda c, kv, ids: serve_mod.scatter_prefill_paged(
+                    c, kv, ids, block_size),
+                donate_argnums=(0,)),
+            "prefill": {},           # per prompt length (ragged prompts)
+        }
+        cache[key] = fns
+    return fns
+
+
+def serve_paged(model, params, requests: Sequence[Request], *,
+                n_slots: int, block_size: int, num_blocks: int,
+                max_prefill_per_step: int = 1, quantized: bool = False,
+                greedy: bool = True, seed: int = 0,
+                policy: str = "continuous",
+                options: Optional[CompileOptions] = None) -> dict:
+    """Serve ``requests`` with continuous batching over the paged cache.
+
+    ``policy="continuous"`` refills freed slots every decode step (Orca-
+    style in-flight batching).  ``policy="static"`` reproduces the seed's
+    fixed waves over the *same* compiled kernels: a wave is admitted only
+    when every slot is free — and only once enough requests have arrived
+    to fill it (or none remain) — then runs to full completion, so the
+    measured delta between the two policies is purely scheduling.
+
+    Returns a dict with the finished Request objects (tokens + per-token
+    emission timestamps relative to the serving clock), decode step count
+    and wall time.  Mutates the ``requests`` objects in place.
+    """
+    cfg = model.cfg
+    if policy not in ("continuous", "static"):
+        raise ValueError(policy)
+    requests = sorted(requests, key=lambda r: r.arrival)
+    max_ctx = max(r.prompt_len + r.gen_len for r in requests)
+    max_blocks = -(-max_ctx // block_size)
+    sched = ContinuousScheduler(
+        n_slots, BlockAllocator(num_blocks), block_size, max_blocks,
+        max_prefill_per_step=(n_slots if policy == "static"
+                              else max_prefill_per_step))
+    options = options or CompileOptions()
+
+    with use_options(options):
+        pools = model.init_paged_cache(num_blocks, block_size,
+                                       quantized=quantized)
+        table = np.zeros((n_slots, max_blocks), np.int32)
+        lengths = np.zeros((n_slots,), np.int32)
+        next_tok = np.zeros((n_slots,), np.int32)
+
+        fns = _engine_fns(model, block_size, quantized, options)
+        decode, scatter = fns["decode"], fns["scatter"]
+        # prefill/decode disaggregation: prefill is its own compiled
+        # program, cached per prompt length (ragged prompts allowed)
+        prefill_fns: dict = fns["prefill"]
+
+        def run_prefill(req: Request):
+            fn = prefill_fns.get(req.prompt_len)
+            if fn is None:
+                fn = jax.jit(lambda p, b, _n=req.prompt_len: model.prefill(
+                    p, b, max_len=_n, quantized=quantized))
+                prefill_fns[req.prompt_len] = fn
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            return fn(params, batch)
+
+        key = jax.random.PRNGKey(seed)
+
+        def sample(logits):
+            nonlocal key
+            if greedy:
+                return jnp.argmax(logits[..., :cfg.vocab_size],
+                                  axis=-1).astype(jnp.int32)
+            key, sk = jax.random.split(key)
+            return jax.random.categorical(
+                sk, logits[..., :cfg.vocab_size]).astype(jnp.int32)
+
+        t0 = time.monotonic()
+
+        def clock() -> float:
+            return time.monotonic() - t0
+
+        idx = 0            # next not-yet-arrived request
+        steps = 0
+
+        def scan_arrivals():
+            nonlocal idx
+            now = clock()
+            while idx < len(requests) and requests[idx].arrival <= now:
+                sched.submit(requests[idx])
+                idx += 1
+
+        def retire(slot: int, req: Request, now: float):
+            sched.finish(slot, now)
+            table[slot, :] = 0       # back to the scrap block
+            lengths[slot] = 0
+            next_tok[slot] = 0
+
+        while sched.has_work() or idx < len(requests):
+            scan_arrivals()
+            if policy == "static" and (
+                    sched.n_active > 0
+                    or (len(sched.pending) < n_slots
+                        and idx < len(requests))):
+                admitted = []        # wave barrier: wait to fill / drain
+            else:
+                admitted = sched.admit(clock())
+            for slot, req in admitted:
+                logits, cache = run_prefill(req)
+                pools = scatter(pools, cache["kv"],
+                                jnp.asarray(req.blocks, jnp.int32))
+                tok = int(np.asarray(sample(logits[0])))
+                req.tokens.append(tok)
+                req.token_times.append(clock())
+                table[slot, :] = 0
+                table[slot, :len(req.blocks)] = req.blocks
+                lengths[slot] = req.prompt_len
+                next_tok[slot] = tok
+                if req.done:         # gen_len == 1: prefill was enough
+                    retire(slot, req, clock())
+            if sched.n_active == 0:
+                if idx < len(requests):
+                    # idle until the next arrival (open-loop load; the
+                    # static policy also waits here for its wave to fill)
+                    time.sleep(max(requests[idx].arrival - clock(), 0.0))
+                continue
+            # async dispatch: the decode step is in flight on the device
+            # while the host scans arrivals and plans admissions below
+            logits, pools = decode(params, jnp.asarray(next_tok), pools,
+                                   jnp.asarray(table),
+                                   jnp.asarray(lengths))
+            tok_dev = sample(logits)
+            steps += 1
+            scan_arrivals()          # overlapped host-side scheduling
+            tok_host = np.asarray(jax.block_until_ready(tok_dev))
+            t_emit = clock()
+            for slot in range(n_slots):
+                req = sched.active[slot]
+                if req is None:
+                    continue         # inactive slots appended to scrap
+                lengths[slot] += 1
+                req.tokens.append(int(tok_host[slot]))
+                req.token_times.append(t_emit)
+                next_tok[slot] = tok_host[slot]
+                if req.done:
+                    retire(slot, req, t_emit)
+
+    total_tokens = sum(len(r.tokens) for r in requests)
+    return {"requests": list(requests), "steps": steps,
+            "tokens": total_tokens, "seconds": clock(),
+            "tok_per_s": total_tokens / max(clock(), 1e-9)}
+
+
+_CLI_EPILOG = """\
+paged serving (--paged) and --quantized-kv:
+  The paged engine backs decode with fixed-size KV blocks from a shared
+  pool (--num-blocks x --block-size positions per layer), indexed by a
+  per-slot page table; gather/append lower through the kokkos.* pipeline
+  (see `python -m repro.core.pipeline --demo paged --print-ir`).
+
+  --quantized-kv composes with the paged layout: the int8 K/V pools get
+  sibling fp32 scale pools of the SAME block geometry (one scale per
+  stored position, head-dim 1) — i.e. the scales live per block and ride
+  the same page table, so freeing a request's blocks frees its scales.
+  Token streams match the quantized contiguous cache exactly (regression-
+  tested in tests/test_serve_paged.py); EXPERIMENTS.md §Perf numbers for
+  --quantized-kv therefore carry over to --paged serving unchanged.
+
+policies:
+  --policy continuous   refill finished slots every decode step
+                        (in-flight batching; the default)
+  --policy static       the seed's fixed waves: admit a full wave, run
+                        until every request in it finishes (baseline)
+"""
+
+
 def main(argv=None) -> int:
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(
+        epilog=_CLI_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     p.add_argument("--arch", default="qwen2-1.5b")
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--batch", "--slots", dest="batch", type=int, default=4,
+                   help="decode slots (batch rows) served in lock-step")
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen-len", type=int, default=16)
-    p.add_argument("--quantized-kv", action="store_true")
+    p.add_argument("--quantized-kv", action="store_true",
+                   help="int8 KV cache (+ per-block scale pools when "
+                        "--paged; see epilog)")
     p.add_argument("--sample", action="store_true",
                    help="sample instead of greedy argmax decode")
     p.add_argument("--seed", type=int, default=0,
                    help="root PRNG seed for prompts and sampling")
+    p.add_argument("--paged", action="store_true",
+                   help="serve with the continuous-batching engine over "
+                        "the block-paged KV cache (see epilog)")
+    p.add_argument("--policy", default="continuous",
+                   choices=("continuous", "static"),
+                   help="slot refill policy for --paged (see epilog)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="KV block size (positions per page) for --paged")
+    p.add_argument("--num-blocks", type=int, default=0,
+                   help="shared pool size for --paged (0 = sized to fit "
+                        "all slots + one spare request)")
+    p.add_argument("--max-prefill-per-step", type=int, default=1,
+                   help="admissions between decode steps (bounds the "
+                        "decode stall a burst of prefills can cause)")
+    p.add_argument("--ragged", action="store_true",
+                   help="draw ragged prompt/gen lengths per request")
+    p.add_argument("--arrival-rate", type=float, default=None,
+                   help="Poisson arrival rate (requests/s); default: all "
+                        "requests arrive at t=0")
     args = p.parse_args(argv)
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
     params = steps_mod.cast_compute(model.init(0), cfg.compute_dtype)
+    if args.paged:
+        reqs = make_requests(args.requests, prompt_len=args.prompt_len,
+                             gen_len=args.gen_len, vocab=cfg.vocab_size,
+                             seed=args.seed, ragged=args.ragged,
+                             arrival_rate=args.arrival_rate)
+        blocks_per_req = -(-(args.prompt_len + args.gen_len)
+                           // args.block_size)
+        num_blocks = args.num_blocks or \
+            1 + blocks_per_req * (args.batch + 1)
+        out = serve_paged(model, params, reqs, n_slots=args.batch,
+                          block_size=args.block_size,
+                          num_blocks=num_blocks,
+                          max_prefill_per_step=args.max_prefill_per_step,
+                          quantized=args.quantized_kv,
+                          greedy=not args.sample, seed=args.seed,
+                          policy=args.policy)
+        print(f"[serve:{args.policy}] {len(out['requests'])} requests, "
+              f"{out['tokens']} tokens in {out['steps']} decode steps, "
+              f"{out['tok_per_s']:.1f} tok/s")
+        return 0
     out = serve_loop(model, params, n_requests=args.requests,
                      batch=args.batch, prompt_len=args.prompt_len,
                      gen_len=args.gen_len, quantized=args.quantized_kv,

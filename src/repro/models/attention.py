@@ -188,6 +188,78 @@ def _cache_views(cache: dict, compute_dtype) -> Tuple[jax.Array, jax.Array]:
     return cache["k"], cache["v"]
 
 
+def init_paged_kv_cache(cfg, n_blocks: int, block_size: int, *,
+                        dtype=None, quantized: bool = False) -> dict:
+    """One layer's block-paged KV pool: ``(n_blocks, Hkv, block_size, hd)``
+    fixed-size blocks shared by every slot via a per-slot page table.
+    Zero-init is load-bearing: block 0 is the scrap block inactive slots
+    write into, and stale positions gathered past a slot's length must be
+    finite for the decode-attention mask (``exp(-inf) = 0``) to nuke them.
+    ``quantized`` adds per-position int8 scales living in sibling pools of
+    the same block geometry (hd-dim 1) — scales are paged exactly like the
+    values they scale."""
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    if quantized:
+        return {
+            "k": jnp.zeros((n_blocks, hkv, block_size, hd), jnp.int8),
+            "v": jnp.zeros((n_blocks, hkv, block_size, hd), jnp.int8),
+            "k_scale": jnp.zeros((n_blocks, hkv, block_size, 1),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((n_blocks, hkv, block_size, 1),
+                                 jnp.float32),
+        }
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    return {"k": jnp.zeros((n_blocks, hkv, block_size, hd), dtype),
+            "v": jnp.zeros((n_blocks, hkv, block_size, hd), dtype)}
+
+
+def apply_attention_decode_paged(p: dict, x: jax.Array, cfg, *,
+                                 pools: dict, table: jax.Array,
+                                 lengths: jax.Array, block_size: int,
+                                 window: Optional[int] = None
+                                 ) -> Tuple[jax.Array, dict]:
+    """Ragged one-token decode against the block-paged pool.  x: (B, D);
+    ``lengths``: (B,) int32 per-slot token counts (each row's new token
+    lands at its own position — continuous batching's in-flight raggedness);
+    ``table``: (B, max_blocks) int32 page table.  Appends via
+    ``paged.append`` and gathers via ``paged.gather`` — both compiled
+    through the kokkos.* pipeline, never host Python — then runs the same
+    decode-attention kernel as the contiguous path with per-row lengths
+    masking each slot's stale tail.  Returns (out (B, D), updated pools)."""
+    from repro.core import ops as cops
+    B, _ = x.shape
+    dt = x.dtype
+    pos = lengths[:, None].astype(jnp.int32)           # (B, S=1) per-row
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, B, 1))
+    q, k, v = _project_qkv(p, x[:, None, :], cfg, pos)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                # (B, H*, hd)
+    if "k_scale" in pools:
+        kq, ks = _quantize(k)
+        vq, vs = _quantize(v)
+        pools = {key: cops.page_append(pools[key], table, lengths, val,
+                                       block_size=block_size)
+                 for key, val in (("k", kq), ("v", vq),
+                                  ("k_scale", ks), ("v_scale", vs))}
+        gk, gv, gks, gvs = (
+            cops.page_gather(pools[key], table, lengths,
+                             block_size=block_size)
+            for key in ("k", "v", "k_scale", "v_scale"))
+        kc = (gk.astype(jnp.float32) * gks).astype(cdt(cfg))
+        vc = (gv.astype(jnp.float32) * gvs).astype(cdt(cfg))
+    else:
+        pools = {key: cops.page_append(pools[key], table, lengths, val,
+                                       block_size=block_size)
+                 for key, val in (("k", k), ("v", v))}
+        kc = cops.page_gather(pools["k"], table, lengths,
+                              block_size=block_size)
+        vc = cops.page_gather(pools["v"], table, lengths,
+                              block_size=block_size)
+    out = kops.decode_attention(q, kc, vc, lengths + 1, window=window)
+    out = out.reshape(B, cfg.q_dim)
+    return out @ p["wo"].astype(dt), pools
+
+
 def apply_attention_decode(p: dict, x: jax.Array, cfg, *, cache: dict,
                            length: jax.Array,
                            window: Optional[int] = None

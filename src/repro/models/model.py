@@ -70,6 +70,17 @@ class Model:
     def decode_step(self, params, token, cache, length):
         return serve_mod.decode_step(params, token, cache, length, self.cfg)
 
+    def init_paged_cache(self, n_blocks: int, block_size: int, *,
+                         quantized: bool = False):
+        return serve_mod.init_paged_cache(self.cfg, n_blocks, block_size,
+                                          quantized=quantized)
+
+    def paged_decode_step(self, params, token, cache, table, lengths, *,
+                          block_size: int):
+        return serve_mod.paged_decode_step(params, token, cache, table,
+                                           lengths, self.cfg,
+                                           block_size=block_size)
+
 
 def build_model(cfg) -> Model:
     cfg.validate()

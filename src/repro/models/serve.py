@@ -91,6 +91,81 @@ def init_cache(cfg, batch: int, max_len: int, *,
     raise ValueError(fam)
 
 
+def init_paged_cache(cfg, n_blocks: int, block_size: int, *,
+                     quantized: bool = False) -> Dict[str, Any]:
+    """Block-paged KV cache for the serving engine (dense/moe families):
+    per-layer pools stacked to ``(L, n_blocks, Hkv, block_size, hd)`` for
+    lax.scan, sharing one page table across layers (every layer of a slot
+    uses the same block ids — the per-layer pools are parallel arenas)."""
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged KV cache supports dense/moe families, not {cfg.family}")
+    L = cfg.n_layers
+    one = attn.init_paged_kv_cache(cfg, n_blocks, block_size,
+                                   quantized=quantized)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), one)
+
+
+def scatter_prefill_paged(pools: Dict[str, Any], kv_stack: Dict[str, Any],
+                          block_ids: jax.Array,
+                          block_size: int) -> Dict[str, Any]:
+    """Write a prefilled contiguous cache into the paged pools: each
+    layer's ``(B=1, Hkv, P, hd)`` prefill KV is chunked into
+    ``len(block_ids)`` fixed-size blocks and scattered to the slot's
+    allocated block ids (prefill/decode disaggregation: prefill runs the
+    compiled contiguous kernel, then its cache is paged in one scatter)."""
+    nb = len(block_ids)
+    ids = jnp.asarray(block_ids, jnp.int32)
+
+    def put(pool, kv):
+        # kv: (L, 1, Hkv, P, hd) with P >= n_tokens; pad to nb*bs, chunk
+        L, _, hkv, P, hd = kv.shape
+        need = nb * block_size
+        k = kv[:, 0]
+        if P < need:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, need - P), (0, 0)))
+        chunks = k[:, :, :need].reshape(L, hkv, nb, block_size, hd)
+        chunks = chunks.transpose(0, 2, 1, 3, 4)   # (L, nb, Hkv, bs, hd)
+        return pool.at[:, ids].set(chunks.astype(pool.dtype))
+
+    return {key: put(pools[key], kv_stack[key]) for key in pools}
+
+
+def paged_decode_step(params, token: jax.Array, cache: Dict[str, Any],
+                      table: jax.Array, lengths: jax.Array, cfg, *,
+                      block_size: int) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One continuous-batching decode step.  token: (B,) int32 (one per
+    slot — inactive slots pass any token and write the scrap block);
+    table: (B, max_blocks) int32; lengths: (B,) int32 per-slot counts.
+    Returns (logits (B, V), updated pools)."""
+    fam = cfg.family
+    if fam not in ("dense", "moe"):
+        raise NotImplementedError(fam)
+    x = apply_embed(params["embed"], token[:, None], cfg)[:, 0]
+    x = constrain(x, "batch", "embed")
+
+    def body(x, inp):
+        lp, pools = inp
+        h = apply_norm(lp["ln1"], x[:, None, :], cfg.norm)[:, 0]
+        a, pools = attn.apply_attention_decode_paged(
+            lp["attn"], h, cfg, pools=pools, table=table, lengths=lengths,
+            block_size=block_size)
+        x = x + a
+        h = apply_norm(lp["ln2"], x[:, None, :], cfg.norm)
+        if fam == "moe":
+            mo, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+            x = x + mo[:, 0]
+        else:
+            x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)[:, 0]
+        return x, pools
+
+    x, pools = jax.lax.scan(body, x, (params["layers"], cache))
+    x = apply_norm(params["final_norm"], x[:, None, :], cfg.norm)
+    logits = _lm_head(params, x, cfg)[:, 0]
+    return logits, pools
+
+
 # ---------------------------------------------------------------------------
 # prefill
 # ---------------------------------------------------------------------------

@@ -1,0 +1,177 @@
+"""Serving-engine scheduling: request queue, block allocator, continuous
+(in-flight) batching admission.
+
+Pure host-side bookkeeping — no jax in this module.  The launch layer
+(:mod:`repro.launch.serve`) owns the device loop; this module decides
+*which* request occupies *which* decode slot backed by *which* KV blocks,
+so the policy is testable without compiling a model.
+
+Design (vLLM/Orca-shaped, scaled to the repro):
+
+* :class:`BlockAllocator` — a free list over the shared KV block pool.
+  Block 0 is never handed out: it is the **scrap block** every inactive
+  slot's append lands in (their page-table rows are all zero), which
+  keeps the compiled decode step branch-free over slot activity.
+* :class:`Request` — one generation request: prompt, target length,
+  arrival time, and the per-token emission timestamps the latency
+  percentiles are computed from.
+* :class:`ContinuousScheduler` — FCFS admission into a fixed set of
+  decode slots.  ``max_prefill_per_step`` bounds how many prefills may
+  be admitted between two decode steps — the prefill/decode
+  disaggregation knob that bounds decode-step stalls under bursts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+
+class PagePoolExhausted(RuntimeError):
+    """No free KV blocks remain for an admission that needs them.
+
+    Raised by :meth:`BlockAllocator.alloc` when a request's block demand
+    exceeds the free list.  The scheduler treats it as back-pressure
+    (the request waits in the pending queue); callers admitting outside
+    the scheduler see it as an error."""
+
+
+class BlockAllocator:
+    """Free-list allocator over block ids ``1 .. n_blocks-1`` of the
+    shared pool (block 0 is the reserved scrap block)."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (block 0 is scrap)")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"need {n} KV blocks, {len(self._free)} free "
+                f"(pool of {self.n_blocks}, block 0 reserved)")
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, ids: List[int]) -> None:
+        self._free.extend(ids)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its per-token telemetry."""
+
+    rid: int
+    prompt: "object"               # 1-D int array of token ids
+    gen_len: int
+    arrival: float                 # seconds on the serving clock
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.gen_len
+
+    def blocks_needed(self, block_size: int) -> int:
+        """Total fixed-size blocks this request's full context occupies."""
+        return -(-(self.prompt_len + self.gen_len) // block_size)
+
+
+class ContinuousScheduler:
+    """FCFS continuous-batching admission over ``n_slots`` decode slots.
+
+    Every decode step the launch loop calls :meth:`admit` (refilling
+    freed slots, bounded by ``max_prefill_per_step``) and, per finished
+    request, :meth:`finish` (which frees the slot and its blocks).  A
+    request is only admitted when a slot AND its whole block budget are
+    available — reserving the full ``prompt+gen`` capacity up front keeps
+    mid-stream appends infallible (no preemption/swapping tier here).
+    """
+
+    def __init__(self, n_slots: int, allocator: BlockAllocator,
+                 block_size: int, max_blocks_per_slot: int,
+                 max_prefill_per_step: int = 1):
+        self.n_slots = n_slots
+        self.allocator = allocator
+        self.block_size = block_size
+        self.max_blocks_per_slot = max_blocks_per_slot
+        self.max_prefill_per_step = max(1, max_prefill_per_step)
+        self.pending: Deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * n_slots
+
+    # -- queue ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        need = req.blocks_needed(self.block_size)
+        if need > self.max_blocks_per_slot:
+            raise PagePoolExhausted(
+                f"request {req.rid} needs {need} blocks > page table "
+                f"width {self.max_blocks_per_slot}")
+        if need > self.allocator.n_blocks - 1:
+            # could never be satisfied even by an empty pool — an error,
+            # not back-pressure (back-pressure would spin forever)
+            raise PagePoolExhausted(
+                f"request {req.rid} needs {need} blocks but the pool "
+                f"holds only {self.allocator.n_blocks - 1} allocatable")
+        self.pending.append(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or self.n_active > 0
+
+    # -- admission / completion ----------------------------------------------
+    def admit(self, now: float) -> List[Tuple[int, Request]]:
+        """Admit pending requests into free slots, FCFS, at most
+        ``max_prefill_per_step`` per call.  Stops (leaving the head
+        pending) when the pool cannot cover the head request's blocks —
+        FCFS back-pressure, no starvation via queue-jumping."""
+        admitted: List[Tuple[int, Request]] = []
+        slots = self.free_slots()
+        while (self.pending and slots
+               and len(admitted) < self.max_prefill_per_step):
+            req = self.pending[0]
+            need = req.blocks_needed(self.block_size)
+            if need > self.allocator.n_free:
+                break
+            self.pending.popleft()
+            req.blocks = self.allocator.alloc(need)
+            req.slot = slots.pop(0)
+            req.admitted_at = now
+            self.active[req.slot] = req
+            admitted.append((req.slot, req))
+        return admitted
+
+    def finish(self, slot: int, now: float) -> Request:
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not active")
+        req.finished_at = now
+        self.allocator.release(req.blocks)
+        req.blocks = []
+        self.active[slot] = None
+        return req
+
+
+def poisson_arrivals(n: int, rate_per_s: float, rng) -> List[float]:
+    """Arrival offsets (seconds) for ``n`` requests under a Poisson
+    process of ``rate_per_s`` — exponential inter-arrival gaps."""
+    gaps = rng.exponential(1.0 / max(rate_per_s, 1e-9), size=n)
+    times = gaps.cumsum()
+    return [float(t) for t in times]
