@@ -119,6 +119,30 @@ def _check_serve(rec: Dict, problems: List[str]) -> None:
         problems.append("serve record missing 'paged_vs_contiguous'")
     elif not isinstance(pvc.get("token_parity"), bool):
         problems.append("paged_vs_contiguous.token_parity must be a bool")
+    paging = rec.get("paging")
+    if not isinstance(paging, dict) or not paging:
+        problems.append("serve record missing 'paging' (lazy/chunked/"
+                        "prefix sections)")
+        return
+    alloc_keys = {"n_blocks", "peak_blocks_in_use", "peak_utilization",
+                  "total_allocs"}
+    for target, sections in paging.items():
+        for sec in ("lazy_vs_reserve", "chunked_prefill", "prefix_share"):
+            entry = sections.get(sec)
+            if not isinstance(entry, dict):
+                problems.append(f"paging[{target}] missing '{sec}'")
+                continue
+            if not isinstance(entry.get("token_parity"), bool):
+                problems.append(
+                    f"paging[{target}][{sec}].token_parity must be a bool")
+        lazy = sections.get("lazy_vs_reserve", {})
+        for mode in ("reserve", "lazy"):
+            alloc = lazy.get(mode, {}).get("allocator")
+            if not (isinstance(alloc, dict)
+                    and alloc_keys <= alloc.keys()):
+                problems.append(
+                    f"paging[{target}].lazy_vs_reserve.{mode}.allocator "
+                    "must carry the allocator telemetry keys")
 
 
 _BENCH_CHECKS = {"serve": _check_serve}

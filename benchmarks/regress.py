@@ -1,0 +1,223 @@
+"""Perf-regression gate: diff a freshly produced ``BENCH_*.json``
+against a committed baseline record.
+
+Two comparison tiers, picked automatically:
+
+* **numeric** — when the two records share the machine fingerprint, the
+  workload parameters and the smoke flag, every comparable metric is
+  diffed with a noise-aware threshold.  Metrics that carry their own
+  spread (``stats_over_repeats`` → ``{n, median, min, max}``, or
+  ``{wall_us, iqr_us}`` pairs) derive the threshold from the
+  *baseline's* observed spread, floored at ``--threshold`` (default
+  0.15): a run-to-run wobble the baseline itself exhibits is not a
+  regression.  Bare percentile tails (``p99``) use a higher floor
+  (0.25) — pooled tails are the noisiest numbers in the records.
+
+* **claims-only** — when fingerprints or workloads differ (the normal
+  CI case: the runner's smoke record vs the committed full-size
+  record), raw numbers are incomparable, so only the *ordering claims*
+  both records encode are checked: continuous beats static, paged holds
+  token parity, lazy admits more than reserve-up-front, chunked prefill
+  lowers interactive p99 (full records only), prefix sharing saves
+  blocks, the tune cache re-compiles with zero new measurements.  A
+  claim that holds in the baseline must hold in the candidate.
+
+Direction is inferred from the metric name: ``*_ms``/``*_us``/
+``latency``/``p99`` are lower-is-better, everything else (``tok_per_s``,
+``speedup``) higher-is-better.
+
+CLI (exit 1 on any regression, so CI can gate on it)::
+
+    PYTHONPATH=src python -m benchmarks.regress \
+        --check BENCH_serve_smoke.json --baseline BENCH_serve.json
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterator, List, Tuple
+
+P99_FLOOR = 0.25
+
+
+# ---------------------------------------------------------------------------
+# claims: deterministic orderings a record encodes
+# ---------------------------------------------------------------------------
+
+def _claims_serve(rec: Dict) -> Dict[str, bool]:
+    claims = {}
+    for target, per_t in rec.get("results", {}).items():
+        speedup = per_t.get("continuous_speedup")
+        if speedup is not None:
+            claims[f"{target}/continuous_beats_static"] = speedup > 1.0
+    pvc = rec.get("paged_vs_contiguous", {})
+    if isinstance(pvc.get("token_parity"), bool):
+        claims["paged_token_parity"] = pvc["token_parity"]
+    for target, sections in rec.get("paging", {}).items():
+        lazy = sections.get("lazy_vs_reserve")
+        if lazy:
+            claims[f"{target}/lazy_admits_more"] = (
+                lazy["lazy"]["peak_active"]
+                > lazy["reserve"]["peak_active"])
+            claims[f"{target}/lazy_token_parity"] = lazy["token_parity"]
+        chunked = sections.get("chunked_prefill")
+        if chunked:
+            claims[f"{target}/chunked_token_parity"] = \
+                chunked["token_parity"]
+            if not rec.get("smoke"):
+                # tail-latency orderings only stabilize at full size
+                claims[f"{target}/chunked_lowers_interactive_p99"] = (
+                    chunked["interactive_p99_ratio"] < 1.0)
+        share = sections.get("prefix_share")
+        if share:
+            claims[f"{target}/prefix_saves_blocks"] = \
+                share["blocks_saved"] > 0
+            claims[f"{target}/prefix_token_parity"] = \
+                share["token_parity"]
+    return claims
+
+
+def _claims_autotune(rec: Dict) -> Dict[str, bool]:
+    claims = {}
+    gate = rec.get("fusion_gate", {})
+    if gate:
+        claims["fused_fewer_launches"] = (
+            gate["fused"]["launches"] < gate["unfused"]["launches"])
+    cache = rec.get("tune_cache", {})
+    if cache:
+        claims["second_compile_measures_nothing"] = (
+            cache["second_compile"]["measured"] == 0)
+        claims["identical_source_on_cache_hit"] = \
+            bool(cache["identical_source"])
+    return claims
+
+
+_CLAIMS = {"serve": _claims_serve, "autotune": _claims_autotune}
+
+
+def extract_claims(rec: Dict) -> Dict[str, bool]:
+    fn = _CLAIMS.get(rec.get("bench"))
+    return fn(rec) if fn else {}
+
+
+# ---------------------------------------------------------------------------
+# numeric metrics: (path, value, baseline-derived rel. spread, direction)
+# ---------------------------------------------------------------------------
+
+def _lower_is_better(path: Tuple[str, ...]) -> bool:
+    name = "/".join(path)
+    return any(tok in name for tok in ("_ms", "_us", "latency", "p50",
+                                       "p99"))
+
+
+def _iter_metrics(node, path=()) -> Iterator[Tuple[Tuple[str, ...],
+                                                   float, float]]:
+    """Walk a record, yielding ``(path, value, rel_spread)`` for every
+    comparable metric.  Spread is 0.0 when the metric is a bare point
+    (percentiles, counters)."""
+    if not isinstance(node, dict):
+        return
+    if {"n", "median", "min", "max"} <= node.keys():
+        med = float(node["median"])
+        spread = ((float(node["max"]) - float(node["min"])) / abs(med)
+                  if med else 0.0)
+        yield path + ("median",), med, spread
+        return
+    if {"n", "p50", "p99"} <= node.keys():
+        yield path + ("p99",), float(node["p99"]), 0.0
+        return
+    if "wall_us" in node and "iqr_us" in node:
+        wall = float(node["wall_us"])
+        spread = float(node["iqr_us"]) / wall if wall else 0.0
+        yield path + ("wall_us",), wall, spread
+        return
+    for key in sorted(node):
+        yield from _iter_metrics(node[key], path + (key,))
+
+
+def compare_records(candidate: Dict, baseline: Dict, *,
+                    threshold: float = 0.15) -> Tuple[List[str],
+                                                      List[str], str]:
+    """→ (regressions, notes, mode).  ``mode`` is ``"numeric"`` or
+    ``"claims-only"``."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    if candidate.get("bench") != baseline.get("bench"):
+        return ([f"bench mismatch: candidate={candidate.get('bench')!r} "
+                 f"baseline={baseline.get('bench')!r}"], notes,
+                "claims-only")
+
+    base_claims = extract_claims(baseline)
+    cand_claims = extract_claims(candidate)
+    for name, held in sorted(base_claims.items()):
+        if not held:
+            continue   # the baseline itself never committed to this
+        if name not in cand_claims:
+            notes.append(f"claim not present in candidate: {name}")
+        elif not cand_claims[name]:
+            regressions.append(f"claim regressed: {name}")
+
+    comparable = (candidate.get("machine") == baseline.get("machine")
+                  and candidate.get("workload") == baseline.get("workload")
+                  and bool(candidate.get("smoke"))
+                  == bool(baseline.get("smoke")))
+    if not comparable:
+        notes.append("machine fingerprint / workload / smoke flag "
+                     "differ: raw numbers incomparable, checked "
+                     "ordering claims only")
+        return regressions, notes, "claims-only"
+
+    base_metrics = {p: (v, s) for p, v, s in _iter_metrics(baseline)}
+    cand_metrics = {p: (v, s) for p, v, s in _iter_metrics(candidate)}
+    for path, (base_val, spread) in sorted(base_metrics.items()):
+        if path not in cand_metrics or base_val == 0:
+            continue
+        cand_val, _ = cand_metrics[path]
+        floor = P99_FLOOR if path[-1] in ("p50", "p99") else threshold
+        tol = max(floor, spread)
+        lower = _lower_is_better(path)
+        change = ((cand_val - base_val) / abs(base_val)) * \
+            (1 if lower else -1)   # positive = got worse
+        if change > tol:
+            direction = "rose" if lower else "fell"
+            regressions.append(
+                f"{'/'.join(path)} {direction} "
+                f"{abs(cand_val / base_val - 1) * 100:.1f}% "
+                f"({base_val:.4g} -> {cand_val:.4g}, "
+                f"tolerance {tol * 100:.0f}%)")
+    return regressions, notes, "numeric"
+
+
+def main(argv=None) -> int:
+    import argparse
+    parser = argparse.ArgumentParser(
+        description="diff a fresh BENCH record against a committed "
+                    "baseline (exit 1 on regression)")
+    parser.add_argument("--check", metavar="PATH", required=True,
+                        help="candidate record (the fresh run)")
+    parser.add_argument("--baseline", metavar="PATH", required=True,
+                        help="baseline record (the committed one)")
+    parser.add_argument("--threshold", type=float, default=0.15,
+                        help="noise floor for relative regressions "
+                             "(default 0.15; widened per-metric by the "
+                             "baseline's own spread)")
+    args = parser.parse_args(argv)
+    with open(args.check) as f:
+        candidate = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    regressions, notes, mode = compare_records(
+        candidate, baseline, threshold=args.threshold)
+    for note in notes:
+        print(f"NOTE: {note}")
+    for reg in regressions:
+        print(f"REGRESSION: {reg}")
+    if regressions:
+        return 1
+    n_claims = sum(extract_claims(baseline).values())
+    print(f"{args.check}: ok vs {args.baseline} "
+          f"({mode}; {n_claims} baseline claim(s) held)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -96,7 +96,8 @@ def _op_callable(op: Op, options: CompileOptions) -> Optional[Callable]:
             return lambda *a, _fn=fn, _t=tiling: _fn(*a, tiling=_t,
                                                      **_op_kwargs(op))
         return lambda *a, _fn=fn: _fn(*a, **_op_kwargs(op))
-    if op.opname in ("kokkos.page_gather", "kokkos.page_append"):
+    if op.opname in ("kokkos.page_gather", "kokkos.page_append",
+                     "kokkos.page_copy"):
         # paged-KV cache plumbing dispatches through the registry like
         # kk.* library calls; the nest/tiling attrs describe the mapped
         # loop structure the backend implementation realizes
@@ -316,6 +317,10 @@ def _src_line(op: Op, names: dict) -> str:
     if op.opname in ("paged.append", "kokkos.page_append"):
         return (f"{res} = _page_append({a[0]}, {a[1]}, {a[2]}, {a[3]}, "
                 f"{at['block_size']!r})")
+    if op.opname in ("paged.copy", "paged.swap_in", "paged.swap_out",
+                     "kokkos.page_copy"):
+        return (f"{res} = _page_copy({a[0]}, {a[1]}, {a[2]}, {a[3]}, "
+                f"{at['block_size']!r})")
     if op.opname == "linalg.max_pool2d":
         return (f"{res} = jax.lax.reduce_window({a[0]}, -jnp.inf, "
                 f"jax.lax.max, {(1, 1) + tuple(at['window'])!r}, "
@@ -430,6 +435,16 @@ def _page_append(pool, table, lengths, kv, block_size):
     blk = table[rows, lengths // block_size]
     off = lengths % block_size
     return pool.at[blk, :, off, :].set(kv)
+
+
+def _page_copy(dst, src, src_ids, dst_ids, block_size):
+    """Copy whole KV blocks between arenas (kokkos.page_copy — CoW forks
+    and the preemption/swap tier); arenas are rank 4 or rank 5, with the
+    block axis at ndim-4."""
+    axis = dst.ndim - 4
+    taken = jnp.take(src, src_ids, axis=axis).astype(dst.dtype)
+    idx = (slice(None),) * axis + (dst_ids,)
+    return dst.at[idx].set(taken)
 
 
 def _batch_norm(x, s, b, m, v, *, eps):

@@ -378,6 +378,17 @@ def _page_append_ref(block_size: int):
     return ref
 
 
+def _page_copy_ref(block_size: int):
+    def ref(dst, src, src_ids, dst_ids):
+        # the block axis sits 4 from the end: (n_blocks, H, bs, hd) for a
+        # single arena, (L, n_blocks, H, bs, hd) for layer-stacked arenas
+        axis = dst.ndim - 4
+        taken = jnp.take(src, src_ids, axis=axis).astype(dst.dtype)
+        idx = (slice(None),) * axis + (dst_ids,)
+        return dst.at[idx].set(taken)
+    return ref
+
+
 def _paged_via_pipeline(opname: str, arrays: tuple, kwargs: dict):
     """Eager paged-cache execution = compile the one-op graph through the
     full pipeline for the ambient backend (memoized, like sparse)."""
@@ -394,7 +405,11 @@ def _paged_via_pipeline(opname: str, arrays: tuple, kwargs: dict):
     mod = _PAGED_PIPELINE_CACHE.get(key)
     if mod is None:
         from repro.core import pipeline as pipeline_mod
-        builder = page_gather if opname == "paged.gather" else page_append
+        builder = {"paged.gather": page_gather,
+                   "paged.append": page_append,
+                   "paged.copy": page_copy,
+                   "paged.swap_out": page_swap_out,
+                   "paged.swap_in": page_swap_in}[opname]
 
         def paged_fn(*args):
             return builder(*args, **kwargs)
@@ -439,6 +454,48 @@ def page_append(pool, table, lengths, kv, *, block_size: int):
                     attrs={"block_size": block_size})
     return _paged_via_pipeline("paged.append", (pool, table, lengths, kv),
                                {"block_size": block_size})
+
+
+def _paged_copy_like(opname: str, dst, src, src_ids, dst_ids,
+                     block_size: int):
+    block_size = int(block_size)
+    ref = _page_copy_ref(block_size)
+    if tracing():
+        return emit(opname, [dst, src, src_ids, dst_ids], ref,
+                    attrs={"block_size": block_size})
+    return _paged_via_pipeline(opname, (dst, src, src_ids, dst_ids),
+                               {"block_size": block_size})
+
+
+def page_copy(dst, src, src_ids, dst_ids, *, block_size: int):
+    """Block-granular arena copy: ``dst[dst_ids[i]] = src[src_ids[i]]``.
+
+    ``dst``/``src`` are block arenas — ``(n_blocks, heads, block_size,
+    head_dim)`` or layer-stacked ``(L, n_blocks, ...)`` — and may be the
+    *same* array: the serving engine's copy-on-write fork duplicates a
+    refcount-shared block inside one pool (``paged.copy``, lowered with
+    the swap ops to ``kokkos.page_copy``).  Functional, like every
+    tensor op."""
+    return _paged_copy_like("paged.copy", dst, src, src_ids, dst_ids,
+                            block_size)
+
+
+def page_swap_out(swap, pool, src_ids, dst_ids, *, block_size: int):
+    """Evict blocks from the device pool into the swap arena
+    (``swap[dst_ids[i]] = pool[src_ids[i]]``) — the preemption tier's
+    save path.  Returns the updated swap arena; the engine must run this
+    *before* releasing the pool blocks (a freed block can be reallocated
+    and overwritten immediately)."""
+    return _paged_copy_like("paged.swap_out", swap, pool, src_ids,
+                            dst_ids, block_size)
+
+
+def page_swap_in(pool, swap, src_ids, dst_ids, *, block_size: int):
+    """Restore swapped blocks into freshly allocated pool blocks
+    (``pool[dst_ids[i]] = swap[src_ids[i]]``) — re-admission of a
+    preempted request.  Returns the updated pool."""
+    return _paged_copy_like("paged.swap_in", pool, swap, src_ids,
+                            dst_ids, block_size)
 
 
 def conv2d(x, w, *, stride=(1, 1), padding="SAME"):

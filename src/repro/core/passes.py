@@ -289,12 +289,24 @@ def sparsify(graph: Graph,
 _PAGED_TO_KOKKOS = {
     "paged.gather": "kokkos.page_gather",
     "paged.append": "kokkos.page_append",
+    "paged.copy": "kokkos.page_copy",
+    "paged.swap_out": "kokkos.page_copy",
+    "paged.swap_in": "kokkos.page_copy",
+}
+
+# block-granular bulk copies (CoW fork, swap-out to the host-side pool,
+# swap-in on resume) all lower to one kokkos.page_copy spelling; the
+# `direction` attr records which engine path emitted the op
+_PAGED_COPY_DIRECTION = {
+    "paged.copy": "copy",
+    "paged.swap_out": "swap_out",
+    "paged.swap_in": "swap_in",
 }
 
 
 @register_pass(
-    reads="paged.gather / paged.append over a shared KV block pool + per-slot page table",
-    writes="kokkos.page_gather / kokkos.page_append with nest, level_map, tiling, cost; SCRATCH-typed block pool")
+    reads="paged.gather / paged.append over a shared KV block pool + per-slot page table; paged.copy / paged.swap_out / paged.swap_in block-granular arena copies",
+    writes="kokkos.page_gather / kokkos.page_append / kokkos.page_copy (direction=copy|swap_out|swap_in) with nest, level_map, tiling, cost; SCRATCH-typed block pool")
 def paged_to_kokkos(graph: Graph,
                     options: Optional[CompileOptions] = None) -> int:
     """Lower the block-paged KV-cache ops to the ``kokkos.*`` dialect.
@@ -316,7 +328,15 @@ def paged_to_kokkos(graph: Graph,
     in the type system.  The emitter dispatches the lowered ops through
     the backend kernel table (``kernels/paged_kv.py``), so
     ``--print-ir-after-all`` shows structured IR and never an opaque
-    Python closure."""
+    Python closure.
+
+    The engine's block-granular bulk copies — copy-on-write forks
+    (``paged.copy``) and the preemption/swap tier
+    (``paged.swap_out`` / ``paged.swap_in``) — lower to one
+    ``kokkos.page_copy`` spelling whose ``direction`` attr records which
+    engine path emitted it; the nest is league over the copied blocks,
+    team over heads, vector over the head dim, and the cost attr charges
+    one read + one write of each copied block."""
     options = options or current_options()
     from repro.core.costmodel import CostModel
     hier = options.resolve_hierarchy()
@@ -326,6 +346,43 @@ def paged_to_kokkos(graph: Graph,
     for op in list(graph.ops):
         kk = _PAGED_TO_KOKKOS.get(op.opname)
         if kk is None:
+            continue
+        if kk == "kokkos.page_copy":
+            # block-granular arena-to-arena copy: (dst, src, src_ids,
+            # dst_ids).  Arenas are rank 4 (one layer) or rank 5 (the
+            # engine's L-stacked pools); the block axis is ndim-4.
+            dst, src, src_ids = op.operands[0], op.operands[1], op.operands[2]
+            n_blocks, heads, bs, hd = dst.type.shape[-4:]
+            layers = 1
+            for dim in dst.type.shape[:-4]:
+                layers *= dim
+            itemsize = dtype_itemsize(dst.type.dtype)
+            block_bytes = layers * heads * bs * hd * itemsize
+            n_copies = src_ids.type.shape[0]
+            dst.type = dst.type.with_space(MemorySpace.SCRATCH)
+            src.type = src.type.with_space(MemorySpace.SCRATCH)
+            blocks_per_team = max(
+                1, min(n_copies,
+                       hier.scratch_bytes // max(2 * block_bytes, 1) or 1))
+            nest = (LoopLevel("league", n_copies),
+                    LoopLevel("team", heads),
+                    LoopLevel("vector", hd))
+            moved = 2 * n_copies * block_bytes
+            pred = model.roofline(bytes_moved=float(moved), flops=0.0,
+                                  launches=1)
+            new = Op(kk, op.operands, [r.type for r in op.results],
+                     attrs={**op.attrs,
+                            "direction": _PAGED_COPY_DIRECTION[op.opname],
+                            "nest": nest,
+                            "tiling": {"blocks_per_team": blocks_per_team,
+                                       "block_bytes": block_bytes},
+                            "exec_space": hier.exec_space,
+                            "level_map": hier.map_levels(
+                                tuple(lv.name for lv in nest)),
+                            "cost": {"predicted_us": round(pred * 1e6, 3),
+                                     "source": source}})
+            graph.replace_op(op, [new], dict(zip(op.results, new.results)))
+            rewritten += 1
             continue
         pool, table = op.operands[0], op.operands[1]
         n_blocks, heads, bs, hd = pool.type.shape

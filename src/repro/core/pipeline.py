@@ -185,7 +185,41 @@ def _demo_paged():
     return paged_step, specs, example
 
 
-_DEMOS = {"mlp": _demo_mlp, "spmv": _demo_spmv, "paged": _demo_paged}
+def _demo_paged_swap():
+    """The serving engine's preemption/swap tier: evict a preempted
+    request's blocks into the host-side swap arena (paged.swap_out), then
+    restore them into freshly allocated pool blocks (paged.swap_in) —
+    both lowered by `paged_to_kokkos` to kokkos.page_copy nests whose
+    `direction` attr records the engine path (the CoW-fork paged.copy
+    lowers to the same spelling)."""
+    import numpy as np
+
+    from repro.core import ops
+    rng = np.random.default_rng(0)
+    n_blocks, n_swap, heads, bs, hd = 9, 5, 2, 8, 16
+
+    def swap_round_trip(pool, swap, pool_ids, swap_ids, fresh_ids):
+        swap2 = ops.page_swap_out(swap, pool, pool_ids, swap_ids,
+                                  block_size=bs)
+        return ops.page_swap_in(pool, swap2, swap_ids, fresh_ids,
+                                block_size=bs)
+
+    specs = (jax.ShapeDtypeStruct((n_blocks, heads, bs, hd), "float32"),
+             jax.ShapeDtypeStruct((n_swap, heads, bs, hd), "float32"),
+             jax.ShapeDtypeStruct((3,), "int32"),
+             jax.ShapeDtypeStruct((3,), "int32"),
+             jax.ShapeDtypeStruct((3,), "int32"))
+    example = (rng.standard_normal((n_blocks, heads, bs, hd))
+               .astype(np.float32),
+               np.zeros((n_swap, heads, bs, hd), np.float32),
+               np.array([2, 5, 7], np.int32),
+               np.array([1, 2, 3], np.int32),
+               np.array([4, 6, 8], np.int32))
+    return swap_round_trip, specs, example
+
+
+_DEMOS = {"mlp": _demo_mlp, "spmv": _demo_spmv, "paged": _demo_paged,
+          "paged_swap": _demo_paged_swap}
 
 
 _CLI_EPILOG = """\
@@ -198,6 +232,9 @@ the demos (--demo):
   paged  serving-engine paged KV-cache step: page_append then page_gather
          over a shared block pool (shows kokkos.page_* ops with nest/
          level_map/tiling attrs and the #scratch-typed pool)
+  paged_swap  the engine's preemption/swap tier: swap_out to the host-side
+         arena then swap_in to fresh pool blocks, both lowered to
+         kokkos.page_copy with a direction attr
 
 translation outputs:
   --emit PATH       freestanding *Python* module, weights embedded as a

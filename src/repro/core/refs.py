@@ -133,6 +133,10 @@ def op_ref(opname: str, attrs: dict) -> Callable:
     if opname in ("paged.append", "kokkos.page_append"):
         from repro.core.ops import _page_append_ref
         return _page_append_ref(attrs["block_size"])
+    if opname in ("paged.copy", "paged.swap_in", "paged.swap_out",
+                  "kokkos.page_copy"):
+        from repro.core.ops import _page_copy_ref
+        return _page_copy_ref(attrs["block_size"])
     if opname in ("linalg.map",):
         return attrs["fn"]
     raise KeyError(f"no reference semantics for {opname}")

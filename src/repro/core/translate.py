@@ -190,7 +190,8 @@ def _fmt_attr(v) -> str:
 
 _COMMENT_ATTRS = ("src", "kind", "exec_space", "level_map", "nest",
                   "tiling", "collapse", "from", "to", "max_nnz_row",
-                  "format", "axis", "space", "lazy", "cost")
+                  "format", "axis", "space", "lazy", "cost",
+                  "block_size", "direction")
 
 
 def _op_comment(op: Op, namer: ValueNamer) -> str:
@@ -597,6 +598,111 @@ class _CppEmitter:
         self.w("});", 4)
         self._team_rows_close()
 
+    # -- paged KV cache (the serving engine's compiled data movement) -------
+
+    def emit_page_gather(self, op: Op):
+        """``kokkos.page_gather``: league over (slot, block) pairs, team
+        over the block's (head, position) entries, vector over the head
+        dim — each team copies one page-table block into the slot's
+        contiguous view."""
+        res = self.namer.name(op.results[0])
+        pool, table = (self.namer.name(o) for o in op.operands[:2])
+        n_blocks, heads, bs, hd = op.operands[0].type.shape
+        n_slots, mb = op.operands[1].type.shape
+        label = self.kernel_label(op, res)
+        self.alloc(op.results[0])
+        self.w("{")
+        self.w("using team_policy = Kokkos::TeamPolicy<lapis_exec>;", 2)
+        self.w(f"Kokkos::parallel_for(\"{label}\", "
+               f"team_policy({n_slots * mb}, Kokkos::AUTO),", 2)
+        self.w("    KOKKOS_LAMBDA(const team_policy::member_type& team) {",
+               2)
+        self.w(f"const int s = team.league_rank() / {mb};", 3)
+        self.w(f"const int b = team.league_rank() % {mb};", 3)
+        self.w(f"const int32_t blk = {table}(s, b);", 3)
+        self.w(f"Kokkos::parallel_for(Kokkos::TeamThreadRange(team, "
+               f"{heads * bs}), [&](const int t) {{", 3)
+        self.w(f"const int h = t / {bs};", 4)
+        self.w(f"const int p = t % {bs};", 4)
+        self.w(f"Kokkos::parallel_for(Kokkos::ThreadVectorRange(team, "
+               f"{hd}), [&](const int d) {{", 4)
+        self.w(f"{res}(s, h, b * {bs} + p, d) = {pool}(blk, h, p, d);", 5)
+        self.w("});", 4)
+        self.w("});", 3)
+        self.w("});", 2)
+        self.w("}")
+
+    def emit_page_append(self, op: Op):
+        """``kokkos.page_append``: league over slots; each team writes one
+        token's KV into the slot's tail block at offset
+        ``lengths(s) % block_size``.  The result aliases the pool operand
+        (Kokkos views have reference semantics — the in-place update the
+        functional IR models with a fresh SSA value)."""
+        pool, table, lengths, kv = (self.namer.name(o) for o in op.operands)
+        res = self.namer.name(op.results[0])
+        n_blocks, heads, bs, hd = op.operands[0].type.shape
+        n_slots, _ = op.operands[1].type.shape
+        label = self.kernel_label(op, res)
+        self.w(f"auto {res} = {pool};  // in-place append: views alias")
+        self.w("{")
+        self.w("using team_policy = Kokkos::TeamPolicy<lapis_exec>;", 2)
+        self.w(f"Kokkos::parallel_for(\"{label}\", "
+               f"team_policy({n_slots}, Kokkos::AUTO),", 2)
+        self.w("    KOKKOS_LAMBDA(const team_policy::member_type& team) {",
+               2)
+        self.w("const int s = team.league_rank();", 3)
+        self.w(f"const int32_t blk = {table}(s, {lengths}(s) / {bs});", 3)
+        self.w(f"const int32_t off = {lengths}(s) % {bs};", 3)
+        self.w(f"Kokkos::parallel_for(Kokkos::TeamThreadRange(team, "
+               f"{heads}), [&](const int h) {{", 3)
+        self.w(f"Kokkos::parallel_for(Kokkos::ThreadVectorRange(team, "
+               f"{hd}), [&](const int d) {{", 4)
+        self.w(f"{res}(blk, h, off, d) = {kv}(s, h, d);", 5)
+        self.w("});", 4)
+        self.w("});", 3)
+        self.w("});", 2)
+        self.w("}")
+
+    def emit_page_copy(self, op: Op):
+        """``kokkos.page_copy``: block-granular bulk copy between arenas
+        (CoW fork / swap tier, per the ``direction`` attr) — league over
+        the copied blocks, team over (head, position), vector over the
+        head dim.  The result aliases the destination arena."""
+        dst, src, src_ids, dst_ids = (self.namer.name(o)
+                                      for o in op.operands)
+        res = self.namer.name(op.results[0])
+        shape = op.operands[0].type.shape
+        if len(shape) != 4:
+            raise TranslateError(
+                f"kokkos.page_copy over rank-{len(shape)} arenas has no "
+                "C++ spelling yet (translate one layer at a time)")
+        n_blocks, heads, bs, hd = shape
+        n_copies = op.operands[2].type.shape[0]
+        direction = op.attrs.get("direction", "copy")
+        label = self.kernel_label(op, res)
+        self.w(f"auto {res} = {dst};  // in-place block copy "
+               f"(direction={direction}): views alias")
+        self.w("{")
+        self.w("using team_policy = Kokkos::TeamPolicy<lapis_exec>;", 2)
+        self.w(f"Kokkos::parallel_for(\"{label}\", "
+               f"team_policy({n_copies}, Kokkos::AUTO),", 2)
+        self.w("    KOKKOS_LAMBDA(const team_policy::member_type& team) {",
+               2)
+        self.w("const int c = team.league_rank();", 3)
+        self.w(f"const int32_t sb = {src_ids}(c);", 3)
+        self.w(f"const int32_t db = {dst_ids}(c);", 3)
+        self.w(f"Kokkos::parallel_for(Kokkos::TeamThreadRange(team, "
+               f"{heads * bs}), [&](const int t) {{", 3)
+        self.w(f"const int h = t / {bs};", 4)
+        self.w(f"const int p = t % {bs};", 4)
+        self.w(f"Kokkos::parallel_for(Kokkos::ThreadVectorRange(team, "
+               f"{hd}), [&](const int d) {{", 4)
+        self.w(f"{res}(db, h, p, d) = {src}(sb, h, p, d);", 5)
+        self.w("});", 4)
+        self.w("});", 3)
+        self.w("});", 2)
+        self.w("}")
+
     # -- constants + memory model -------------------------------------------
 
     def emit_constant(self, op: Op):
@@ -666,6 +772,12 @@ class _CppEmitter:
             self.emit_spmv(op)
         elif name == "kk.spmm":
             self.emit_spmm(op)
+        elif name == "kokkos.page_gather":
+            self.emit_page_gather(op)
+        elif name == "kokkos.page_append":
+            self.emit_page_append(op)
+        elif name == "kokkos.page_copy":
+            self.emit_page_copy(op)
         elif name in ("kokkos.range_parallel", "kokkos.team_parallel"):
             rank = len(op.results[0].type.shape)
             if op.attrs.get("kind") == "reduce":

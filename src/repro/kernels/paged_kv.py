@@ -1,4 +1,4 @@
-"""Block-paged KV-cache kernels (``kokkos.page_gather`` / ``kokkos.page_append``).
+"""Block-paged KV-cache kernels (``kokkos.page_gather`` / ``page_append`` / ``page_copy``).
 
 The serving engine keeps each sequence's KV history in fixed-size blocks
 drawn from a shared pool; a per-slot page table names the blocks in
@@ -27,6 +27,13 @@ index map — the vLLM-style paged-attention gather.  The pallas append
 intentionally falls back to the library scatter via the fallback chain
 (a one-position scatter is a library strength; a hand kernel would
 round-trip the whole pool).
+
+``kokkos.page_copy`` is the block-granular bulk copy behind the engine's
+copy-on-write forks and the preemption/swap tier: operands are
+``(dst, src, src_ids, dst_ids)`` arenas of rank 4 (one layer) or rank 5
+(the engine's L-stacked pools), and block ``src_ids[c]`` of ``src`` is
+copied over block ``dst_ids[c]`` of ``dst``.  The ``direction`` attr set
+by ``paged_to_kokkos`` records which engine path emitted the op.
 """
 from __future__ import annotations
 
@@ -58,6 +65,15 @@ def page_append_xla(pool, table, lengths, kv, *, block_size):
     return pool.at[blk, :, off, :].set(kv.astype(pool.dtype))
 
 
+def page_copy_xla(dst, src, src_ids, dst_ids, *, block_size):
+    # block-granular arena copy (CoW fork / swap tier); arenas are rank 4
+    # (one layer) or rank 5 (L-stacked engine pools) — block axis ndim-4
+    axis = dst.ndim - 4
+    taken = jnp.take(src, src_ids, axis=axis).astype(dst.dtype)
+    idx = (slice(None),) * axis + (dst_ids,)
+    return dst.at[idx].set(taken)
+
+
 # ---------------------------------------------------------------------------
 # loops — explicit league loop over slots (the nest attrs, interpreted)
 # ---------------------------------------------------------------------------
@@ -80,6 +96,16 @@ def page_append_loops(pool, table, lengths, kv, *, block_size):
             pool, kv[s][None, :, None, :].astype(pool.dtype),
             (blk, 0, off, 0))
     return pool
+
+
+def page_copy_loops(dst, src, src_ids, dst_ids, *, block_size):
+    axis = dst.ndim - 4
+    for c in range(src_ids.shape[0]):        # league loop over copies
+        block = jax.lax.dynamic_index_in_dim(
+            src, src_ids[c], axis=axis, keepdims=True).astype(dst.dtype)
+        start = (jnp.int32(0),) * axis + (dst_ids[c],) + (jnp.int32(0),) * 3
+        dst = jax.lax.dynamic_update_slice(dst, block, start)
+    return dst
 
 
 # ---------------------------------------------------------------------------
@@ -121,8 +147,10 @@ def page_gather_pallas(pool, table, lengths, *, block_size,
 
 register_kernel("kokkos.page_gather", "xla", page_gather_xla)
 register_kernel("kokkos.page_append", "xla", page_append_xla)
+register_kernel("kokkos.page_copy", "xla", page_copy_xla)
 register_kernel("kokkos.page_gather", "loops", page_gather_loops)
 register_kernel("kokkos.page_append", "loops", page_append_loops)
+register_kernel("kokkos.page_copy", "loops", page_copy_loops)
 register_kernel("kokkos.page_gather", "pallas", page_gather_pallas)
-# no pallas page_append on purpose: the fallback chain routes it to the
-# xla scatter (see module docstring)
+# no pallas page_append or page_copy on purpose: the fallback chain
+# routes both to the xla scatter/gather (see module docstring)

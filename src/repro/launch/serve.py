@@ -13,7 +13,25 @@ The engine (:func:`serve_paged`) replaces the seed's fixed-wave loop:
   ``--max-prefill-per-step`` so bursts cannot stall the decode loop;
 * an **async dispatch loop**: each decode step is dispatched, host-side
   arrival scanning/scheduling runs while the device computes, and
-  ``jax.block_until_ready`` fences only the token readback.
+  ``jax.block_until_ready`` fences only the token readback;
+* **lazy block allocation** (``--lazy-alloc``): admission reserves only
+  the prompt's blocks, generation grows the page table one block at a
+  time as it crosses block boundaries, and pool exhaustion preempts the
+  lowest-priority in-flight request to a host-side **swap tier**
+  (compiled ``paged.swap_out`` / ``paged.swap_in`` block copies) instead
+  of failing admission;
+* **chunked prefill** (``--prefill-chunk N``): long prompts are prefilled
+  ``N`` tokens at a time, interleaved with decode steps, so one long
+  prompt cannot stall every in-flight decode;
+* **copy-on-write prefix sharing** (``--prefix-share``): requests with a
+  common prompt prefix map the same physical blocks (refcounted); the
+  first divergent append forks the shared block via a compiled
+  ``paged.copy``.
+
+All block movement — gather, append, swap, fork — lowers through the
+``paged_to_kokkos`` pass to ``kokkos.page_*`` IR (visible under
+``--print-ir-after-all`` and in lapis-translate's C++), never host
+Python.
 
 The seed's lock-step wave loop survives as ``--policy static`` (and the
 contiguous-cache path as ``generate``/``serve_loop``) so the two can be
@@ -27,18 +45,21 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import List, Optional, Sequence
+from collections import OrderedDict
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import ops as cops
 from repro.core.options import CompileOptions, use_options
 from repro.launch import steps as steps_mod
 from repro.models import serve as serve_mod
 from repro.models.model import build_model
 from repro.runtime.scheduler import (BlockAllocator, ContinuousScheduler,
+                                     PagePoolExhausted, PrefixIndex,
                                      Request, poisson_arrivals)
 
 
@@ -141,22 +162,62 @@ def make_requests(n: int, *, prompt_len: int, gen_len: int, vocab: int,
     return reqs
 
 
+ENGINE_CACHE_CAP = 8      # (geometry, quantized, backend) cache entries
+PREFILL_CACHE_CAP = 32    # per-length prefill / chunk programs per entry
+ENGINE_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+class _LruDict(OrderedDict):
+    """Bounded insertion-ordered program cache.  :func:`_cached`
+    re-inserts on every hit so order is true LRU; overflow evicts the
+    stalest entry and counts it in ``ENGINE_CACHE_STATS``."""
+
+    def __init__(self, cap: int):
+        super().__init__()
+        self.cap = cap
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.cap:
+            self.popitem(last=False)
+            ENGINE_CACHE_STATS["evictions"] += 1
+
+
+def _cached(cache: "_LruDict", key, make: Callable):
+    """Fetch-or-build with an LRU touch (re-insert moves to MRU end)."""
+    fn = cache.get(key)
+    if fn is None:
+        fn = make()
+    cache[key] = fn
+    return fn
+
+
 def _engine_fns(model, block_size: int, quantized: bool,
                 options: CompileOptions) -> dict:
     """Per-(model, geometry, backend) compiled-program cache.
 
     Repeated :func:`serve_paged` calls (benchmark repeats, tests) reuse
     the jitted decode / prefill-scatter programs — and the per-prompt-
-    length prefill programs of the disaggregated prefill path — instead
-    of re-jitting a cold engine every call.  The backend options are part
-    of the key: the paged ops inside ``decode`` lower through the
-    pipeline at jax-trace time, so a program traced under one target
-    must never be replayed under another.
+    length prefill / prefill-chunk programs of the disaggregated prefill
+    path — instead of re-jitting a cold engine every call.  The backend
+    options are part of the key: the paged ops inside ``decode`` lower
+    through the pipeline at jax-trace time, so a program traced under
+    one target must never be replayed under another.
+
+    Both cache levels are LRU-bounded (``ENGINE_CACHE_CAP`` outer
+    entries, ``PREFILL_CACHE_CAP`` per-length programs each): bucketed
+    ragged prompts plus chunked prefill multiply compiled geometries,
+    and an unbounded cache would grow for the life of the process.
+    Hits, misses and evictions are counted in ``ENGINE_CACHE_STATS``
+    and exported in the serve telemetry.
     """
-    cache = model.__dict__.setdefault("_paged_jit_cache", {})
+    cache = model.__dict__.setdefault("_paged_jit_cache",
+                                      _LruDict(ENGINE_CACHE_CAP))
     key = (block_size, quantized, dataclasses.astuple(options))
     fns = cache.get(key)
     if fns is None:
+        ENGINE_CACHE_STATS["misses"] += 1
         fns = {
             "decode": jax.jit(
                 lambda p, t, c, tb, ln: model.paged_decode_step(
@@ -166,9 +227,12 @@ def _engine_fns(model, block_size: int, quantized: bool,
                 lambda c, kv, ids: serve_mod.scatter_prefill_paged(
                     c, kv, ids, block_size),
                 donate_argnums=(0,)),
-            "prefill": {},           # per prompt length (ragged prompts)
+            "prefill": _LruDict(PREFILL_CACHE_CAP),  # per prompt length
+            "chunk": _LruDict(PREFILL_CACHE_CAP),    # per chunk length
         }
-        cache[key] = fns
+    else:
+        ENGINE_CACHE_STATS["hits"] += 1
+    cache[key] = fns                 # insert or LRU-touch
     return fns
 
 
@@ -177,6 +241,8 @@ def serve_paged(model, params, requests: Sequence[Request], *,
                 max_prefill_per_step: int = 1, quantized: bool = False,
                 greedy: bool = True, seed: int = 0,
                 policy: str = "continuous",
+                lazy_alloc: bool = False, prefill_chunk: int = 0,
+                prefix_share: bool = False, num_swap_blocks: int = 0,
                 options: Optional[CompileOptions] = None) -> dict:
     """Serve ``requests`` with continuous batching over the paged cache.
 
@@ -187,41 +253,71 @@ def serve_paged(model, params, requests: Sequence[Request], *,
     to fill it (or none remain) — then runs to full completion, so the
     measured delta between the two policies is purely scheduling.
 
+    ``lazy_alloc`` admits on prompt-block availability only and grows the
+    page table block-by-block during generation; under pool pressure the
+    lowest-priority in-flight request is preempted to a host-side swap
+    arena (``num_swap_blocks`` blocks, default = ``num_blocks``) with a
+    compiled ``paged.swap_out`` copy and re-admitted FCFS with
+    ``paged.swap_in``.  ``prefill_chunk`` (a multiple of ``block_size``)
+    prefills long prompts that many tokens per engine iteration,
+    interleaved with decode steps.  ``prefix_share`` content-hashes
+    prompt blocks and maps shared prefixes into multiple page tables
+    (refcounted, copy-on-write on the first divergent append).
+
     Returns a dict with the finished Request objects (tokens + per-token
-    emission timestamps relative to the serving clock), decode step count
-    and wall time.  Mutates the ``requests`` objects in place.
+    emission timestamps relative to the serving clock), decode step
+    count, wall time and a ``telemetry`` block (scheduler + allocator +
+    jit-cache counters).  Mutates the ``requests`` objects in place.
     """
     cfg = model.cfg
     if policy not in ("continuous", "static"):
         raise ValueError(policy)
+    if prefill_chunk and prefill_chunk % block_size:
+        raise ValueError(
+            f"prefill_chunk ({prefill_chunk}) must be a multiple of "
+            f"block_size ({block_size}): non-final chunks must fill "
+            f"whole KV blocks")
     requests = sorted(requests, key=lambda r: r.arrival)
     max_ctx = max(r.prompt_len + r.gen_len for r in requests)
     max_blocks = -(-max_ctx // block_size)
     sched = ContinuousScheduler(
         n_slots, BlockAllocator(num_blocks), block_size, max_blocks,
         max_prefill_per_step=(n_slots if policy == "static"
-                              else max_prefill_per_step))
+                              else max_prefill_per_step),
+        lazy=lazy_alloc,
+        prefix_index=PrefixIndex(block_size) if prefix_share else None)
     options = options or CompileOptions()
 
     with use_options(options):
         pools = model.init_paged_cache(num_blocks, block_size,
                                        quantized=quantized)
+        swap_pools = swap_alloc = None
+        if lazy_alloc:
+            # the preemption tier: a host-side arena of the same block
+            # geometry (block 0 reserved, like the pool)
+            n_swap = num_swap_blocks or num_blocks
+            swap_pools = model.init_paged_cache(n_swap + 1, block_size,
+                                                quantized=quantized)
+            swap_alloc = BlockAllocator(n_swap + 1)
         table = np.zeros((n_slots, max_blocks), np.int32)
         lengths = np.zeros((n_slots,), np.int32)
         next_tok = np.zeros((n_slots,), np.int32)
+        prefilling: dict = {}    # slot -> Request mid-chunked-prefill
+        chunk_rr = 0             # round-robin cursor over prefilling
 
         fns = _engine_fns(model, block_size, quantized, options)
         decode, scatter = fns["decode"], fns["scatter"]
         # prefill/decode disaggregation: prefill is its own compiled
         # program, cached per prompt length (ragged prompts allowed)
-        prefill_fns: dict = fns["prefill"]
+        prefill_fns: _LruDict = fns["prefill"]
+        chunk_fns: _LruDict = fns["chunk"]
 
         def run_prefill(req: Request):
-            fn = prefill_fns.get(req.prompt_len)
-            if fn is None:
-                fn = jax.jit(lambda p, b, _n=req.prompt_len: model.prefill(
-                    p, b, max_len=_n, quantized=quantized))
-                prefill_fns[req.prompt_len] = fn
+            fn = _cached(
+                prefill_fns, req.prompt_len,
+                lambda: jax.jit(
+                    lambda p, b, _n=req.prompt_len: model.prefill(
+                        p, b, max_len=_n, quantized=quantized)))
             batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
             return fn(params, batch)
 
@@ -257,6 +353,128 @@ def serve_paged(model, params, requests: Sequence[Request], *,
             lengths[slot] = 0
             next_tok[slot] = 0
 
+        def swap_out(victim: Request):
+            """Evict ``victim`` to the swap arena.  The compiled
+            ``paged.swap_out`` copy runs BEFORE the scheduler releases
+            the pool blocks — a freed block can be reallocated and
+            overwritten by the very next admission."""
+            nonlocal swap_pools
+            try:
+                sids = swap_alloc.alloc(len(victim.blocks))
+            except PagePoolExhausted as e:
+                raise PagePoolExhausted(
+                    f"swap arena exhausted while preempting request "
+                    f"{victim.rid}: {e}; {sched.describe_usage()}"
+                ) from None
+            src = np.asarray(victim.blocks, np.int32)
+            dst = np.asarray(sids, np.int32)
+            for k in swap_pools:
+                swap_pools[k] = cops.page_swap_out(
+                    swap_pools[k], pools[k], src, dst,
+                    block_size=block_size)
+            prefilling.pop(victim.slot, None)
+            sched.preempt(victim.slot, sids)
+
+        def swap_in(req: Request):
+            """Re-admission of a preempted request: restore its saved
+            blocks into the freshly allocated ``req.blocks``."""
+            nonlocal pools
+            src = np.asarray(req.swap_blocks, np.int32)
+            dst = np.asarray(req.blocks, np.int32)
+            for k in pools:
+                pools[k] = cops.page_swap_in(
+                    pools[k], swap_pools[k], src, dst,
+                    block_size=block_size)
+            swap_alloc.release(req.swap_blocks)
+            req.swap_blocks = []
+
+        def ensure_append_capacity():
+            """Before a decode step, make sure every decoding slot owns
+            the block its KV append will write: lazily grow across
+            block boundaries, fork refcount-shared (CoW) blocks, and —
+            under pool pressure — preempt the lowest-priority request
+            to the swap tier and retry."""
+            nonlocal pools
+            for slot in range(n_slots):
+                req = sched.active[slot]
+                if req is None or slot in prefilling:
+                    continue
+                while True:
+                    try:
+                        fork = sched.prepare_append(
+                            req, req.stored_positions())
+                    except PagePoolExhausted:
+                        if swap_alloc is None:
+                            raise
+                        victim = sched.pick_victim()
+                        if victim is None:
+                            raise
+                        swap_out(victim)
+                        if victim is req:
+                            break    # the requester itself was evicted
+                        continue
+                    if fork is not None:
+                        src_bid, dst_bid = fork
+                        s = np.asarray([src_bid], np.int32)
+                        d = np.asarray([dst_bid], np.int32)
+                        for k in pools:
+                            pools[k] = cops.page_copy(
+                                pools[k], pools[k], s, d,
+                                block_size=block_size)
+                    break
+
+        def sync_slots():
+            """Rebuild the device-visible page table / lengths / next
+            token from scheduler state (the single source of truth):
+            lazy growth, CoW forks, preemption and resume all edit
+            ``req.blocks`` host-side, and the decode step reads the
+            arrays fresh every iteration."""
+            for slot in range(n_slots):
+                req = sched.active[slot]
+                table[slot, :] = 0
+                if req is None or slot in prefilling or not req.tokens:
+                    lengths[slot] = 0
+                    next_tok[slot] = 0
+                    continue
+                table[slot, :len(req.blocks)] = req.blocks
+                lengths[slot] = req.stored_positions()
+                next_tok[slot] = req.tokens[-1]
+
+        def advance_chunk():
+            """Run one prefill chunk for one mid-prefill slot (round-
+            robin).  Mid-prefill slots keep a scrap page-table row in
+            the decode step — the chunk program writes through its own
+            ``table_row`` — so a shared prompt block can never be
+            clobbered by the slot's idle decode appends."""
+            nonlocal pools, chunk_rr
+            slots = sorted(prefilling)
+            slot = slots[chunk_rr % len(slots)]
+            chunk_rr += 1
+            req = prefilling[slot]
+            start = req.prefill_pos
+            size = min(prefill_chunk, req.prompt_len - start)
+            fn = _cached(
+                chunk_fns, size,
+                lambda: jax.jit(
+                    lambda p, t, s, c, tr: model.paged_prefill_chunk(
+                        p, t, s, c, tr, block_size=block_size),
+                    donate_argnums=(3,)))
+            row = np.zeros((max_blocks,), np.int32)
+            row[:len(req.blocks)] = req.blocks
+            logits, pools = fn(
+                params,
+                jnp.asarray(req.prompt[start:start + size], jnp.int32),
+                jnp.asarray(start, jnp.int32), pools, jnp.asarray(row))
+            req.prefill_pos += size
+            if req.prefill_pos < req.prompt_len:
+                return
+            del prefilling[slot]     # prompt fully cached: start decode
+            tok = int(np.asarray(sample(logits)))
+            req.tokens.append(tok)
+            req.token_times.append(clock())
+            if req.done:             # gen_len == 1: prefill was enough
+                retire(slot, req, clock())
+
         while sched.has_work() or idx < len(requests):
             scan_arrivals()
             if policy == "static" and (
@@ -267,24 +485,40 @@ def serve_paged(model, params, requests: Sequence[Request], *,
             else:
                 admitted = sched.admit(clock())
             for slot, req in admitted:
+                if req.swap_blocks:  # resumed from the swap tier
+                    swap_in(req)
+                    if not req.tokens:
+                        prefilling[slot] = req   # preempted mid-prefill
+                    continue
+                if prefill_chunk and req.prompt_len > prefill_chunk:
+                    prefilling[slot] = req       # chunked: interleaved
+                    continue
                 logits, cache = run_prefill(req)
                 pools = scatter(pools, cache["kv"],
                                 jnp.asarray(req.blocks, jnp.int32))
                 tok = int(np.asarray(sample(logits[0])))
                 req.tokens.append(tok)
                 req.token_times.append(clock())
-                table[slot, :] = 0
-                table[slot, :len(req.blocks)] = req.blocks
-                lengths[slot] = req.prompt_len
-                next_tok[slot] = tok
+                req.prefill_pos = req.prompt_len
                 if req.done:         # gen_len == 1: prefill was enough
                     retire(slot, req, clock())
-            if sched.n_active == 0:
-                if idx < len(requests):
+            if prefilling:
+                # chunked prefill: one chunk per engine iteration,
+                # interleaved with the decode step below so one long
+                # prompt cannot stall every in-flight decode
+                advance_chunk()
+            decodable = sum(
+                1 for s in range(n_slots)
+                if sched.active[s] is not None and s not in prefilling)
+            if decodable == 0:
+                if sched.n_active == 0 and not prefilling \
+                        and idx < len(requests):
                     # idle until the next arrival (open-loop load; the
-                    # static policy also waits here for its wave to fill)
+                    # static policy also waits here for its wave)
                     time.sleep(max(requests[idx].arrival - clock(), 0.0))
                 continue
+            ensure_append_capacity()
+            sync_slots()
             # async dispatch: the decode step is in flight on the device
             # while the host scans arrivals and plans admissions below
             logits, pools = decode(params, jnp.asarray(next_tok), pools,
@@ -297,19 +531,23 @@ def serve_paged(model, params, requests: Sequence[Request], *,
             t_emit = clock()
             for slot in range(n_slots):
                 req = sched.active[slot]
-                if req is None:
+                if req is None or slot in prefilling:
                     continue         # inactive slots appended to scrap
-                lengths[slot] += 1
                 req.tokens.append(int(tok_host[slot]))
                 req.token_times.append(t_emit)
-                next_tok[slot] = tok_host[slot]
                 if req.done:
                     retire(slot, req, t_emit)
 
     total_tokens = sum(len(r.tokens) for r in requests)
+    telemetry = sched.telemetry()
+    telemetry["allocator"] = sched.allocator.telemetry()
+    if swap_alloc is not None:
+        telemetry["swap"] = swap_alloc.telemetry()
+    telemetry["engine_cache"] = dict(ENGINE_CACHE_STATS)
     return {"requests": list(requests), "steps": steps,
             "tokens": total_tokens, "seconds": clock(),
-            "tok_per_s": total_tokens / max(clock(), 1e-9)}
+            "tok_per_s": total_tokens / max(clock(), 1e-9),
+            "telemetry": telemetry}
 
 
 _CLI_EPILOG = """\
@@ -332,6 +570,29 @@ policies:
                         (in-flight batching; the default)
   --policy static       the seed's fixed waves: admit a full wave, run
                         until every request in it finishes (baseline)
+
+allocation and prefill (--paged):
+  --lazy-alloc          admit a request once its PROMPT blocks fit
+                        (instead of reserving prompt+gen up front) and
+                        grow the page table one block at a time during
+                        generation.  Pool pressure preempts the lowest-
+                        priority in-flight request to a host-side swap
+                        arena (--num-swap-blocks, default --num-blocks)
+                        via compiled paged.swap_out / paged.swap_in
+                        block copies; it re-enters the queue FCFS.
+  --prefill-chunk N     split prompts longer than N into N-token prefill
+                        chunks (N must be a multiple of --block-size),
+                        interleaved one chunk per decode step, so a long
+                        prompt cannot stall in-flight decodes.
+  --prefix-share        content-hash prompt blocks and map shared
+                        prefixes into multiple page tables (refcounted);
+                        the first divergent append forks the block with
+                        a compiled copy-on-write paged.copy.
+
+  All of it stays compiled IR: swap and fork lower through the
+  paged_to_kokkos pass to kokkos.page_copy (direction=copy|swap_out|
+  swap_in) — `python -m repro.core.pipeline --demo paged_swap
+  --print-ir` shows the nests, lapis-translate emits the C++.
 """
 
 
@@ -367,6 +628,19 @@ def main(argv=None) -> int:
     p.add_argument("--max-prefill-per-step", type=int, default=1,
                    help="admissions between decode steps (bounds the "
                         "decode stall a burst of prefills can cause)")
+    p.add_argument("--lazy-alloc", action="store_true",
+                   help="admit on prompt-block availability and grow "
+                        "page tables during generation; preempt to a "
+                        "swap arena under pool pressure (see epilog)")
+    p.add_argument("--prefill-chunk", type=int, default=0,
+                   help="chunked prefill size in tokens (multiple of "
+                        "--block-size; 0 = monolithic prefill)")
+    p.add_argument("--prefix-share", action="store_true",
+                   help="copy-on-write sharing of common prompt-prefix "
+                        "blocks across requests (see epilog)")
+    p.add_argument("--num-swap-blocks", type=int, default=0,
+                   help="swap arena size for --lazy-alloc preemption "
+                        "(0 = same as --num-blocks)")
     p.add_argument("--ragged", action="store_true",
                    help="draw ragged prompt/gen lengths per request")
     p.add_argument("--arrival-rate", type=float, default=None,
@@ -391,7 +665,11 @@ def main(argv=None) -> int:
                           max_prefill_per_step=args.max_prefill_per_step,
                           quantized=args.quantized_kv,
                           greedy=not args.sample, seed=args.seed,
-                          policy=args.policy)
+                          policy=args.policy,
+                          lazy_alloc=args.lazy_alloc,
+                          prefill_chunk=args.prefill_chunk,
+                          prefix_share=args.prefix_share,
+                          num_swap_blocks=args.num_swap_blocks)
         print(f"[serve:{args.policy}] {len(out['requests'])} requests, "
               f"{out['tokens']} tokens in {out['steps']} decode steps, "
               f"{out['tok_per_s']:.1f} tok/s")

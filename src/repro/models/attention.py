@@ -260,6 +260,78 @@ def apply_attention_decode_paged(p: dict, x: jax.Array, cfg, *,
     return out @ p["wo"].astype(dt), pools
 
 
+def apply_attention_prefill_chunk_paged(p: dict, x: jax.Array, cfg, *,
+                                        pools: dict, table_row: jax.Array,
+                                        start: jax.Array, block_size: int,
+                                        window: Optional[int] = None
+                                        ) -> Tuple[jax.Array, dict]:
+    """One prompt chunk of one slot, attending against the paged pool.
+
+    x: (C, D) chunk activations at absolute positions ``start ..
+    start+C-1`` (``start`` is a traced scalar — one compiled program per
+    chunk length, reused across chunk offsets); ``table_row``: (MB,) the
+    slot's page-table row, whose prompt blocks are already allocated.
+
+    The chunk's post-RoPE KV is packed into whole blocks and scattered to
+    the slot's block ids with ``paged.copy`` (zero padding past a partial
+    tail block is masked by the per-row lengths), then the whole row is
+    gathered back and each chunk row runs the decode-attention kernel
+    with ``lengths = start + 1 + row`` — causal attention over all prior
+    context plus the chunk's own prefix, with no (C, C) mask materialized.
+    Returns (out (C, D), updated pools)."""
+    from repro.core import ops as cops
+    C, _ = x.shape
+    dt = x.dtype
+    pos = (start + jnp.arange(C, dtype=jnp.int32))[None]       # (1, C)
+    if cfg.mrope:
+        pos = jnp.broadcast_to(pos[None], (3, 1, C))
+    q, k, v = _project_qkv(p, x[None], cfg, pos)
+    q = q[0]                                           # (C, Hq, hd)
+    kt = k[0].transpose(1, 0, 2)                       # (Hkv, C, hd)
+    vt = v[0].transpose(1, 0, 2)
+    nbc = -(-C // block_size)
+
+    def to_arena(t):
+        # (Hkv, C, d) -> (nbc, Hkv, block_size, d) whole-block chunks,
+        # zero-padded past a partial tail block
+        hkv, _, d = t.shape
+        t = jnp.pad(t, ((0, 0), (0, nbc * block_size - C), (0, 0)))
+        return t.reshape(hkv, nbc, block_size, d).transpose(1, 0, 2, 3)
+
+    ids = jax.lax.dynamic_slice(table_row, (start // block_size,), (nbc,))
+    src = jnp.arange(nbc, dtype=jnp.int32)
+    if "k_scale" in pools:
+        kq, ks = _quantize(kt)
+        vq, vs = _quantize(vt)
+        chunks = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    else:
+        chunks = {"k": kt, "v": vt}
+    pools = {key: cops.page_copy(pools[key], to_arena(chunks[key]), src,
+                                 ids, block_size=block_size)
+             for key in pools}
+    glen = jnp.full((1,), start + C, jnp.int32)
+    if "k_scale" in pools:
+        gk, gv, gks, gvs = (
+            cops.page_gather(pools[key], table_row[None], glen,
+                             block_size=block_size)
+            for key in ("k", "v", "k_scale", "v_scale"))
+        kc = (gk.astype(jnp.float32) * gks).astype(cdt(cfg))
+        vc = (gv.astype(jnp.float32) * gvs).astype(cdt(cfg))
+    else:
+        kc = cops.page_gather(pools["k"], table_row[None], glen,
+                              block_size=block_size)
+        vc = cops.page_gather(pools["v"], table_row[None], glen,
+                              block_size=block_size)
+    # broadcast the slot's gathered row to every chunk position: row r is
+    # a "batch row" whose causal horizon is start + 1 + r
+    kcb = jnp.broadcast_to(kc, (C,) + kc.shape[1:])
+    vcb = jnp.broadcast_to(vc, (C,) + vc.shape[1:])
+    row_lengths = start + 1 + jnp.arange(C, dtype=jnp.int32)
+    out = kops.decode_attention(q, kcb, vcb, row_lengths, window=window)
+    out = out.reshape(C, cfg.q_dim)
+    return out @ p["wo"].astype(dt), pools
+
+
 def apply_attention_decode(p: dict, x: jax.Array, cfg, *, cache: dict,
                            length: jax.Array,
                            window: Optional[int] = None

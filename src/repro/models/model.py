@@ -81,6 +81,12 @@ class Model:
                                            lengths, self.cfg,
                                            block_size=block_size)
 
+    def paged_prefill_chunk(self, params, tokens, start, cache, table_row,
+                            *, block_size: int):
+        return serve_mod.paged_prefill_chunk(params, tokens, start, cache,
+                                             table_row, self.cfg,
+                                             block_size=block_size)
+
 
 def build_model(cfg) -> Model:
     cfg.validate()

@@ -166,6 +166,44 @@ def paged_decode_step(params, token: jax.Array, cache: Dict[str, Any],
     return logits, pools
 
 
+def paged_prefill_chunk(params, tokens: jax.Array, start: jax.Array,
+                        cache: Dict[str, Any], table_row: jax.Array,
+                        cfg, *, block_size: int
+                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One chunk of one slot's chunked prefill, straight into the paged
+    pools.  tokens: (C,) int32 prompt tokens at absolute positions
+    ``start .. start+C-1`` (``start`` traced — one compiled program per
+    chunk length); table_row: (MB,) int32, prompt blocks pre-allocated.
+    Non-final chunks must be block-aligned (the engine enforces
+    ``prefill_chunk % block_size == 0``); the final chunk may end
+    mid-block — its zero-padded tail is masked downstream and overwritten
+    by decode appends.  Returns (last-token logits (V,), updated pools)."""
+    fam = cfg.family
+    if fam not in ("dense", "moe"):
+        raise NotImplementedError(fam)
+    x = apply_embed(params["embed"], tokens[None], cfg)[0]     # (C, D)
+
+    def body(x, inp):
+        lp, pools = inp
+        h = apply_norm(lp["ln1"], x[None], cfg.norm)[0]
+        a, pools = attn.apply_attention_prefill_chunk_paged(
+            lp["attn"], h, cfg, pools=pools, table_row=table_row,
+            start=start, block_size=block_size)
+        x = x + a
+        h = apply_norm(lp["ln2"], x[None], cfg.norm)
+        if fam == "moe":
+            mo, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+            x = x + mo[0]
+        else:
+            x = x + mlp_mod.apply_gated_mlp(lp["mlp"], h, cfg.act)[0]
+        return x, pools
+
+    x, pools = jax.lax.scan(body, x, (params["layers"], cache))
+    x = apply_norm(params["final_norm"], x[None], cfg.norm)
+    logits = _lm_head(params, x[:, -1:, :], cfg)[0, 0]
+    return logits, pools
+
+
 # ---------------------------------------------------------------------------
 # prefill
 # ---------------------------------------------------------------------------

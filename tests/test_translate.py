@@ -81,10 +81,34 @@ def _spmv_graph():
     return fn, specs
 
 
+def _paged_swap_graph():
+    """The serving engine's compiled block copies: swap_out to the
+    host-side arena, swap_in to fresh pool blocks, then a copy-on-write
+    fork inside the pool — all three directions of kokkos.page_copy in
+    one unit (the IR-visibility acceptance for the preemption/swap tier
+    and the CoW append path)."""
+    n_blocks, n_swap, heads, bs, hd = 9, 5, 2, 4, 8
+
+    def fn(pool, swap, pool_ids, swap_ids, fresh_ids):
+        swap2 = ops.page_swap_out(swap, pool, pool_ids, swap_ids,
+                                  block_size=bs)
+        pool2 = ops.page_swap_in(pool, swap2, swap_ids, fresh_ids,
+                                 block_size=bs)
+        return ops.page_copy(pool2, pool2, fresh_ids, pool_ids,
+                             block_size=bs)
+    specs = (jax.ShapeDtypeStruct((n_blocks, heads, bs, hd), "float32"),
+             jax.ShapeDtypeStruct((n_swap, heads, bs, hd), "float32"),
+             jax.ShapeDtypeStruct((2,), "int32"),
+             jax.ShapeDtypeStruct((2,), "int32"),
+             jax.ShapeDtypeStruct((2,), "int32"))
+    return fn, specs
+
+
 _GRAPHS = {
     "matmul": _matmul_graph,
     "fused_mlp": _fused_mlp_graph,
     "spmv": _spmv_graph,
+    "paged_swap": _paged_swap_graph,
 }
 
 _CASES = [(g, b) for g in sorted(_GRAPHS) for b in _backends()]
@@ -160,6 +184,20 @@ def test_spmv_storage_format_per_backend(emitted, backend):
         assert "CSR -> padded ELL" not in text
         assert ".valid(row, kk)" not in text
         assert ".rowptr(row + 1)" in text        # CSR row loop
+
+
+@pytest.mark.parametrize("backend", _backends())
+def test_paged_swap_spells_page_copy_directions(emitted, backend):
+    """All three engine copy paths emit the kokkos.page_copy nest with
+    their direction attr in the IR comment — swap tier and CoW fork are
+    compiled data movement, not host side channels."""
+    text = emitted("paged_swap", backend)
+    assert text.count("kokkos.page_copy") == 3
+    for direction in ("swap_out", "swap_in", "copy"):
+        assert f"direction={direction}" in text
+    assert text.count("// in-place block copy") == 3
+    assert "Kokkos::TeamPolicy" in text
+    assert "Kokkos::ThreadVectorRange" in text
 
 
 def test_translate_target_spelling(emitted):
