@@ -91,7 +91,24 @@ def _claims_autotune(rec: Dict) -> Dict[str, bool]:
     return claims
 
 
-_CLAIMS = {"serve": _claims_serve, "autotune": _claims_autotune}
+def _claims_fusion(rec: Dict) -> Dict[str, bool]:
+    """BENCH_fusion.json: per (workload, target), the fused arm must
+    dispatch strictly fewer launches than the unfused arm.  Launch
+    counts are deterministic compiler facts, never timing — they are
+    checked here as orderings and deliberately excluded from the
+    numeric tier (``_iter_metrics`` yields only the ``*_us`` pairs)."""
+    claims = {}
+    for wl, per_target in rec.get("workloads", {}).items():
+        for target, arms in per_target.items():
+            fused, unfused = arms.get("fused"), arms.get("unfused")
+            if fused and unfused:
+                claims[f"{wl}/{target}/fused_fewer_launches"] = (
+                    fused["launches"] < unfused["launches"])
+    return claims
+
+
+_CLAIMS = {"serve": _claims_serve, "autotune": _claims_autotune,
+           "fusion": _claims_fusion}
 
 
 def extract_claims(rec: Dict) -> Dict[str, bool]:
@@ -129,6 +146,17 @@ def _iter_metrics(node, path=()) -> Iterator[Tuple[Tuple[str, ...],
         wall = float(node["wall_us"])
         spread = float(node["iqr_us"]) / wall if wall else 0.0
         yield path + ("wall_us",), wall, spread
+        return
+    stems = [s for s in ("wall", "dispatch")
+             if f"{s}_us" in node and f"{s}_iqr_us" in node]
+    if stems:
+        # BENCH_fusion leaf: {wall,dispatch}_us with their own IQRs,
+        # plus launches/rounds counters that must never be compared
+        # numerically (launch counts are claims, not timings)
+        for s in stems:
+            val = float(node[f"{s}_us"])
+            spread = float(node[f"{s}_iqr_us"]) / val if val else 0.0
+            yield path + (f"{s}_us",), val, spread
         return
     for key in sorted(node):
         yield from _iter_metrics(node[key], path + (key,))

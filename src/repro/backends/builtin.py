@@ -17,6 +17,14 @@ from repro.core.backend import (Backend, LIBRARY_PREFERRED, TPU_HIERARCHY,
 # boundaries are not dispatch boundaries, so the cost model must see zero
 # per-launch overhead there (the runtime fuses through them anyway) while
 # the physical chip geometry stays TPU-shaped.
+#
+# The declared hierarchy is also what the static checkers read
+# (repro.core.analysis): the dialect verifier accepts exactly
+# `hierarchy.level_names` (+ "fused") in level_map attrs, the sync-state
+# checker takes `exec_space` as the default read space, and the
+# scratch-budget checker bounds every decided tiling by `scratch_bytes`.
+# A new backend opts into all four checkers by declaring its hierarchy —
+# never by editing analysis code.
 _LIBRARY_HIERARCHY = dataclasses.replace(TPU_HIERARCHY,
                                          launch_overhead_s=0.0)
 

@@ -23,7 +23,11 @@ from repro.core.backend import (Backend, LevelSpec, ParallelHierarchy,
 # choices stay comparable across backends in side-by-side benchmarks;
 # the *names* and exec space are what make the mapping honest — a
 # ``kokkos.team_parallel`` nest on this backend reads
-# serial → serial-block → jnp-vector in the IR dump.
+# serial → serial-block → jnp-vector in the IR dump.  The same record is
+# the static checkers' ground truth (repro.core.analysis): level_map
+# names are verified against these level names, exec_space="host" makes
+# the sync-state checker demand host-clean DualViews, and scratch_bytes
+# bounds every decided tiling.
 SERIAL_HIERARCHY = ParallelHierarchy(
     exec_space="host",
     levels=(LevelSpec("serial"),

@@ -103,6 +103,14 @@ class ParallelHierarchy:
         return len(self.levels)
 
     @property
+    def level_names(self) -> tuple:
+        """Physical level names, outermost → innermost.  The dialect
+        verifier (repro.core.analysis) accepts exactly these names (plus
+        ``"fused"``) in a ``level_map`` attr — a new backend legalizes
+        its names by declaring levels, never by editing the verifier."""
+        return tuple(s.name for s in self.levels)
+
+    @property
     def vector_width(self) -> int:
         """Innermost (vector/lane) alignment width."""
         return self.levels[-1].width if self.levels else 1

@@ -551,4 +551,12 @@ def emit_python_source(graph: Graph,
     blob_lines = textwrap.wrap(blob, 79 - 4)
     blob_src = "_WEIGHTS_B64 = (\n" + "\n".join(
         f'    "{l}"' for l in blob_lines) + "\n)"
-    return "\n\n".join([_PRELUDE, blob_src, "\n".join(fn_src), ""])
+    prelude = _PRELUDE
+    # between-pass analysis diagnostics ride into the emitted module as
+    # comments (only attached by verifying compiles — plain emits are
+    # byte-identical to before)
+    diags = getattr(graph, "diagnostics", ())
+    if diags:
+        prelude += "\n" + "\n".join(f"# analysis: {d.format()}"
+                                    for d in diags)
+    return "\n\n".join([prelude, blob_src, "\n".join(fn_src), ""])

@@ -408,6 +408,11 @@ KK_OPS = {"kk.gemm", "kk.gemv", "kk.batched_gemm", "kk.spmv", "kk.spmm",
 # opaque Python closure).
 PAGED_OPS = {"paged.gather", "paged.append"}
 KOKKOS_PAGED_OPS = {"kokkos.page_gather", "kokkos.page_append"}
+# Legal values of the ``direction`` attr on kokkos.page_copy (and the
+# tensor-level paged.copy/swap_* it lowers from): which engine path —
+# CoW fork, preemption swap-out, resume swap-in — emitted the copy.
+# The dialect verifier (repro.core.analysis) rejects anything else.
+PAGE_COPY_DIRECTIONS = ("copy", "swap_out", "swap_in")
 # The hierarchical parallel dialect: logical nests awaiting (or carrying)
 # a per-backend level mapping, the IR-visible fused-elementwise region op
 # (its body is a Region of sub-op records, not a closure), plus the

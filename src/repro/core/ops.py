@@ -439,35 +439,47 @@ def page_gather(pool, table, lengths, *, block_size: int):
                                {"block_size": block_size})
 
 
-def page_append(pool, table, lengths, kv, *, block_size: int):
+def page_append(pool, table, lengths, kv, *, block_size: int,
+                shared_block_ids=()):
     """Append one token's KV per slot into the paged pool.
 
     ``kv``: (n_slots, heads, head_dim) written at each slot's position
     ``lengths[s]`` — block ``table[s, lengths[s] // block_size]``, offset
     ``lengths[s] % block_size``.  Returns the updated pool (functional,
     like every tensor op; the jitted serving step donates the buffer).
+
+    ``shared_block_ids`` (static) declares which target blocks are
+    refcount-shared (rc > 1) in the allocator at trace time —
+    ``runtime.scheduler.BlockAllocator.shared_blocks()`` exports exactly
+    that set.  The ``check_paged_alias`` analysis rejects an append
+    whose declared shared target was not forked first (copy-on-write).
     """
     block_size = int(block_size)
     ref = _page_append_ref(block_size)
+    attrs = {"block_size": block_size}
+    if shared_block_ids:
+        attrs["shared_block_ids"] = tuple(int(b) for b in shared_block_ids)
     if tracing():
         return emit("paged.append", [pool, table, lengths, kv], ref,
-                    attrs={"block_size": block_size})
+                    attrs=attrs)
     return _paged_via_pipeline("paged.append", (pool, table, lengths, kv),
-                               {"block_size": block_size})
+                               dict(attrs))
 
 
 def _paged_copy_like(opname: str, dst, src, src_ids, dst_ids,
-                     block_size: int):
+                     block_size: int, extra_attrs: dict = None):
     block_size = int(block_size)
     ref = _page_copy_ref(block_size)
+    attrs = {"block_size": block_size, **(extra_attrs or {})}
     if tracing():
         return emit(opname, [dst, src, src_ids, dst_ids], ref,
-                    attrs={"block_size": block_size})
+                    attrs=attrs)
     return _paged_via_pipeline(opname, (dst, src, src_ids, dst_ids),
-                               {"block_size": block_size})
+                               dict(attrs))
 
 
-def page_copy(dst, src, src_ids, dst_ids, *, block_size: int):
+def page_copy(dst, src, src_ids, dst_ids, *, block_size: int,
+              shared_block_ids=(), fork_block_ids=()):
     """Block-granular arena copy: ``dst[dst_ids[i]] = src[src_ids[i]]``.
 
     ``dst``/``src`` are block arenas — ``(n_blocks, heads, block_size,
@@ -475,9 +487,21 @@ def page_copy(dst, src, src_ids, dst_ids, *, block_size: int):
     *same* array: the serving engine's copy-on-write fork duplicates a
     refcount-shared block inside one pool (``paged.copy``, lowered with
     the swap ops to ``kokkos.page_copy``).  Functional, like every
-    tensor op."""
+    tensor op.
+
+    The static alias declarations cross the allocator's refcount state
+    into IR for ``check_paged_alias``: ``fork_block_ids`` names the
+    shared source blocks this copy privatizes (the CoW fork
+    ``ContinuousScheduler.prepare_append`` emits), ``shared_block_ids``
+    names any still-shared blocks among the *destinations* (an error
+    unless previously forked)."""
+    extra = {}
+    if shared_block_ids:
+        extra["shared_block_ids"] = tuple(int(b) for b in shared_block_ids)
+    if fork_block_ids:
+        extra["fork_block_ids"] = tuple(int(b) for b in fork_block_ids)
     return _paged_copy_like("paged.copy", dst, src, src_ids, dst_ids,
-                            block_size)
+                            block_size, extra)
 
 
 def page_swap_out(swap, pool, src_ids, dst_ids, *, block_size: int):

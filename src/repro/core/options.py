@@ -41,7 +41,9 @@ class CompileOptions:
     hierarchy: Optional[object] = None   # ParallelHierarchy override; None →
                                          # the resolved backend's declared one
     donate_buffers: bool = True
-    verify_ir: bool = False              # PassManager: verify SSA per pass
+    verify_ir: object = False            # PassManager: False | True (dialect
+                                         # verifier per pass) | "full" (also
+                                         # the four analysis checkers)
     print_ir_after_all: bool = False     # PassManager: dump IR per pass
     cost_model: bool = False             # rank tilings / gate fusion with the
                                          # roofline model (repro.core.costmodel)

@@ -1056,3 +1056,13 @@ def run_pipeline(graph: Graph,
                      verify=options.verify_ir,
                      print_ir_after_all=options.print_ir_after_all)
     return pm.run(graph, options)
+
+
+# The static-analysis checkers register themselves as named passes here
+# (not in analysis.py's import, which must stay passmgr-free to avoid an
+# import cycle): importing repro.core.passes is how the registry fills,
+# so the analysis passes appear alongside the lowering passes in
+# `registered_passes()` and docs/passes.md.
+from repro.core import analysis as _analysis  # noqa: E402
+
+_analysis.register_analysis_passes()

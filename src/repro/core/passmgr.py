@@ -8,8 +8,11 @@ paper's per-backend pass sequencing (Table 4.2) made explicit.
 
 The manager also carries the debugging machinery MLIR's pass manager has
 and the seed lacked: per-pass wall time and op-count statistics
-(``graph.pass_stats``), optional SSA verification between passes
-(``verify=True``), and ``print_ir_after_all`` IR dumps.
+(``graph.pass_stats``), between-pass verification (``verify=True`` runs
+the dialect verifier, ``verify="full"`` additionally runs every
+dataflow checker in ``repro.core.analysis`` — race, sync-state,
+scratch-budget, paged-alias — attaching pass-name provenance to each
+diagnostic), and ``print_ir_after_all`` IR dumps.
 """
 from __future__ import annotations
 
@@ -17,14 +20,17 @@ import dataclasses
 import time
 from typing import Callable, Optional, Sequence
 
+from repro.core.analysis import AnalysisError
 from repro.core.ir import Graph
 from repro.core.options import CompileOptions, current_options
 
 _PASSES: dict = {}               # name -> pass fn(graph, options) -> int
 
 
-class IRVerificationError(RuntimeError):
-    """The graph violated SSA form after a pass."""
+class IRVerificationError(AnalysisError):
+    """The graph violated the dialect/SSA rules after a pass.
+    ``.diagnostics`` (inherited from :class:`AnalysisError`) carries the
+    structured records, each stamped with the offending pass's name."""
 
 
 def register_pass(name: Optional[str] = None, *,
@@ -74,24 +80,22 @@ class PassStat:
     ops_after: int
 
 
-def verify_graph(graph: Graph) -> None:
-    """Check SSA form: every top-level operand/output is defined by a graph
-    input or an earlier op (MLIR's between-pass verifier analogue)."""
-    defined = {v.id for v in graph.inputs}
-    for op in graph.ops:
-        for o in op.operands:
-            if o.id not in defined:
-                raise IRVerificationError(
-                    f"op {op!r} uses {o!r} before definition")
-        for r in op.results:
-            defined.add(r.id)
-        for region in op.regions:
-            for v in region.walk():
-                for r in v.results:
-                    defined.add(r.id)
-    for v in graph.outputs:
-        if v.id not in defined:
-            raise IRVerificationError(f"graph output {v!r} is undefined")
+def verify_graph(graph: Graph, options: Optional[CompileOptions] = None,
+                 *, pass_name: str = "") -> None:
+    """Run the dialect verifier (MLIR's between-pass verifier analogue):
+    SSA form *including region scopes*, per-op arity, attr domains.
+
+    Historical note: this used to be a top-level-only SSA walk that
+    added region sub-op results to the defined set without ever checking
+    region sub-op operands or block-arg arity — region bodies were
+    effectively unverified.  It now delegates to
+    :func:`repro.core.analysis.verify_module`, which descends."""
+    from repro.core import analysis
+    errors = [d for d in analysis.verify_module(graph, options,
+                                                pass_name=pass_name)
+              if d.severity == analysis.ERROR]
+    if errors:
+        raise IRVerificationError(diagnostics=tuple(errors))
 
 
 class PassManager:
@@ -99,15 +103,38 @@ class PassManager:
 
     ``pipeline`` entries are pass names (or bare callables, for tests);
     the default is the resolved backend's pipeline spec.
+
+    ``verify`` levels: ``False`` — nothing; ``True`` — the dialect
+    verifier between every pass; ``"full"`` — dialect verifier plus all
+    four dataflow checkers (parallel-race, sync-state, scratch-budget,
+    paged-alias) between every pass.  Every diagnostic is stamped with
+    the name of the pass it first appeared after and accumulated on
+    ``graph.diagnostics``; error severity raises
+    :class:`IRVerificationError`.
     """
 
     def __init__(self, pipeline: Optional[Sequence] = None, *,
-                 verify: bool = False, print_ir_after_all: bool = False,
+                 verify=False, print_ir_after_all: bool = False,
                  sink: Callable = print):
         self.pipeline = tuple(pipeline) if pipeline is not None else None
         self.verify = verify
         self.print_ir_after_all = print_ir_after_all
         self.sink = sink
+
+    def _verify_after(self, graph: Graph, options: CompileOptions,
+                      pass_name: str) -> None:
+        from repro.core import analysis
+        diags = analysis.verify_module(graph, options, pass_name=pass_name)
+        if self.verify == "full":
+            diags.extend(analysis.run_checkers(graph, options,
+                                               pass_name=pass_name))
+        analysis.record_diagnostics(graph, diags)
+        errors = [d for d in diags if d.severity == analysis.ERROR]
+        if errors:
+            raise IRVerificationError(
+                f"IR invalid after pass {pass_name!r}: "
+                + "; ".join(d.format() for d in errors),
+                diagnostics=tuple(errors))
 
     def _resolved_pipeline(self, options: CompileOptions) -> tuple:
         if self.pipeline is not None:
@@ -135,10 +162,10 @@ class PassManager:
                           f"({rewrites} rewrites) -----")
                 self.sink(str(graph))
             if self.verify:
-                verify_graph(graph)
+                self._verify_after(graph, options, name)
         graph.dce()
         if self.verify:
-            verify_graph(graph)
+            self._verify_after(graph, options, "dce")
         graph.pipeline_stats = stats      # name -> rewrite count (seed shape)
         graph.pass_stats = records        # rich per-pass records
         return graph

@@ -284,6 +284,11 @@ def main(argv=None) -> int:
     p.add_argument("--autotune-top-k", type=int, default=3, metavar="K",
                    help="how many model-ranked candidates --autotune "
                         "measures (default: %(default)s)")
+    p.add_argument("--analyze", action="store_true",
+                   help="compile with verify=\"full\" (dialect verifier + "
+                        "race/sync/scratch/paged-alias checkers between "
+                        "every pass) and print the per-module diagnostic "
+                        "report; exit 1 on any error-severity diagnostic")
     p.add_argument("--list-backends", action="store_true",
                    help="list registered backends (capabilities, declared "
                         "ParallelHierarchy, pipeline) and exit")
@@ -308,7 +313,19 @@ def main(argv=None) -> int:
                           print_ir_after_all=args.print_ir_after_all,
                           cost_model=args.cost_model,
                           autotune=args.autotune,
-                          autotune_top_k=args.autotune_top_k)
+                          autotune_top_k=args.autotune_top_k,
+                          verify_ir="full" if args.analyze else False)
+    if args.analyze:
+        from repro.core import analysis
+        try:
+            mod = compile(fn, *specs, options=opts)
+        except analysis.AnalysisError as e:
+            print(analysis.format_report(args.demo, args.target,
+                                         e.diagnostics))
+            return 1
+        diags = tuple(getattr(mod.graph, "diagnostics", ()))
+        print(analysis.format_report(args.demo, args.target, diags))
+        return 1 if any(d.severity == analysis.ERROR for d in diags) else 0
     mod = compile(fn, *specs, options=opts)
     if args.print_ir:
         print(mod.print_ir())

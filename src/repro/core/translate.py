@@ -191,7 +191,8 @@ def _fmt_attr(v) -> str:
 _COMMENT_ATTRS = ("src", "kind", "exec_space", "level_map", "nest",
                   "tiling", "collapse", "from", "to", "max_nnz_row",
                   "format", "axis", "space", "lazy", "cost",
-                  "block_size", "direction")
+                  "block_size", "direction", "shared_block_ids",
+                  "fork_block_ids")
 
 
 def _op_comment(op: Op, namer: ValueNamer) -> str:
@@ -942,6 +943,13 @@ class _CppEmitter:
             "// below as constant arrays (paper §4.4) and loaded by "
             "lapis_initialize().",
             "// " + "=" * 74,
+        ]
+        # diagnostics from the between-pass analysis ride into the unit
+        # as comments (present only when a verifying compile attached
+        # them — golden modules compiled without verify stay byte-stable)
+        for d in getattr(self.graph, "diagnostics", ()):
+            head.append(f"// analysis: {d.format()}")
+        head += [
             "#include <cmath>",
             "#include <cstdint>",
             "#include <cstdio>",

@@ -82,6 +82,15 @@ class BlockAllocator:
     def refcount(self, bid: int) -> int:
         return self._rc.get(bid, 0)
 
+    def shared_blocks(self) -> tuple:
+        """Block ids currently mapped into more than one page table
+        (refcount > 1) — the allocator's copy-on-write invariant,
+        exported for static checking: a compiled step that writes one
+        of these must declare it (``shared_block_ids`` attr on
+        ``paged.append``/``paged.copy``) so the ``check_paged_alias``
+        analysis can verify a fork precedes the write."""
+        return tuple(sorted(b for b, rc in self._rc.items() if rc > 1))
+
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
             raise PagePoolExhausted(
@@ -474,6 +483,17 @@ class ContinuousScheduler:
                 "peak_active": self.peak_active,
                 "lazy": self.lazy,
                 "prefix_sharing": self.prefix is not None}
+
+    def alias_invariant(self) -> dict:
+        """The copy-on-write invariant as data, for crossing into IR:
+        blocks currently mapped into more than one page table.  The
+        serving loop threads ``shared_blocks`` into the static
+        ``shared_block_ids`` attr of the compiled ``paged.append`` /
+        ``paged.copy`` step, which is how the ``check_paged_alias``
+        analysis (repro.core.analysis) verifies statically what
+        :meth:`prepare_append` guarantees dynamically — no write into a
+        shared block without a fork."""
+        return {"shared_blocks": self.allocator.shared_blocks()}
 
 
 def poisson_arrivals(n: int, rate_per_s: float, rng) -> List[float]:

@@ -1,0 +1,640 @@
+"""The static-analysis layer (repro.core.analysis): dialect verifier,
+the four dataflow checkers (parallel-race, sync-state, scratch-budget,
+paged-alias), PassManager ``verify="full"`` wiring with pass-name
+provenance, the ``--analyze`` CLI, and the verifier-cleanliness of every
+registered pass on every backend (randomized)."""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import analysis, ops, pipeline, tracer
+from repro.core.analysis import AnalysisError, Diagnostic
+from repro.core.backend import (LevelSpec, ParallelHierarchy, all_backends)
+from repro.core.ir import (Graph, LoopLevel, MemorySpace, Op, Region,
+                           TensorType, Value)
+from repro.core.options import CompileOptions, use_options
+from repro.core.passmgr import (IRVerificationError, PassManager,
+                                verify_graph)
+
+F32 = "float32"
+
+# frozen at collection time, like test_translate._CASES — test_backend
+# registers a throwaway plugin backend at runtime that must not leak in
+_ALL_BACKENDS = all_backends()
+
+
+def _trace(fn, *specs):
+    return tracer.trace(fn, *[jax.ShapeDtypeStruct(s, F32)
+                              for s in specs])
+
+
+def _noop(graph, options=None):
+    return 0
+
+
+def _reject(graph, options=None, checker=None):
+    """Run a no-op pipeline under verify="full" and return the error
+    diagnostics — asserting every one is op- and pass-attributed."""
+    pm = PassManager((_noop,), verify="full")
+    with pytest.raises(IRVerificationError) as ei:
+        pm.run(graph, options or CompileOptions(target="xla"))
+    diags = ei.value.diagnostics
+    assert diags, "error raised without structured diagnostics"
+    for d in diags:
+        assert d.pass_name == "_noop"       # provenance: offending pass
+        assert d.op and d.path and d.message
+    if checker is not None:
+        assert any(d.checker == checker for d in diags), \
+            [d.format() for d in diags]
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# dialect verifier — incl. the region blindness the old verify_graph had
+# ---------------------------------------------------------------------------
+
+def test_verify_graph_catches_region_orphan_operand():
+    """The satellite bugfix: the old verify_graph added region results to
+    the defined set but never checked region sub-op *operands* — this
+    graph (a fused region whose sub-op reads a value from nowhere)
+    passed verification before and must be rejected now."""
+    t = TensorType((4,), F32)
+    x = Value(t)
+    orphan = Value(t)                     # defined in no scope at all
+    g = Graph("bad_region", [x])
+    arg = Value(t)
+    sub = Op("linalg.relu", [orphan], [t])
+    region = Region([arg], [sub], [sub.results[0]])
+    fused = Op("kokkos.fused", [x], [t], attrs={"ops": ("linalg.relu",)},
+               regions=[region])
+    g.add(fused)
+    g.outputs = [fused.results[0]]
+    with pytest.raises(IRVerificationError) as ei:
+        verify_graph(g)
+    assert any("neither a block arg" in d.message
+               for d in ei.value.diagnostics)
+
+
+def test_verify_graph_still_catches_toplevel_ssa_violation():
+    t = TensorType((2,), F32)
+    x, orphan = Value(t), Value(t)
+    g = Graph("bad", [x])
+    bad = Op("linalg.relu", [orphan], [t])
+    g.add(bad)
+    g.outputs = [bad.results[0]]
+    with pytest.raises(IRVerificationError):
+        verify_graph(g)
+
+
+def test_block_arg_arity_mismatch_rejected():
+    t = TensorType((4,), F32)
+    x = Value(t)
+    g = Graph("arity", [x])
+    arg1, arg2 = Value(t), Value(t)       # two block args, one operand
+    sub = Op("linalg.relu", [arg1], [t])
+    fused = Op("kokkos.fused", [x], [t],
+               regions=[Region([arg1, arg2], [sub], [sub.results[0]])])
+    g.add(fused)
+    g.outputs = [fused.results[0]]
+    diags = _reject(g, checker="dialect")
+    assert any("block args" in d.message for d in diags)
+
+
+def test_block_arg_shape_mismatch_rejected():
+    t, t2 = TensorType((4,), F32), TensorType((8,), F32)
+    x = Value(t)
+    g = Graph("mirror", [x])
+    arg = Value(t2)                       # wrong shape for operand 0
+    sub = Op("linalg.relu", [arg], [t2])
+    fused = Op("kokkos.fused", [x], [t],
+               regions=[Region([arg], [sub], [sub.results[0]])])
+    g.add(fused)
+    g.outputs = [fused.results[0]]
+    diags = _reject(g, checker="dialect")
+    assert any("block arg 0" in d.message for d in diags)
+
+
+def test_bad_page_copy_direction_rejected():
+    t = TensorType((4, 2, 4, 8), F32)
+    ti = TensorType((2,), "int32")
+    pool, ids1, ids2 = Value(t), Value(ti), Value(ti)
+    g = Graph("dir", [pool, ids1, ids2])
+    op = Op("kokkos.page_copy", [pool, pool, ids1, ids2], [t],
+            attrs={"direction": "sideways", "block_size": 4})
+    g.add(op)
+    g.outputs = [op.results[0]]
+    diags = _reject(g, checker="dialect")
+    assert any("direction" in d.message for d in diags)
+
+
+def test_arity_violation_rejected():
+    t = TensorType((4,), F32)
+    x = Value(t)
+    g = Graph("arity2", [x])
+    op = Op("kokkos.sync", [x, x], [], attrs={"space": "device"})
+    g.add(op)
+    g.outputs = [x]
+    diags = _reject(g, checker="dialect")
+    assert any("operands" in d.message for d in diags)
+
+
+def test_level_map_name_outside_declared_hierarchy_rejected():
+    t = TensorType((128,), F32)
+    x = Value(t)
+    g = Graph("levels", [x])
+    op = Op("kokkos.range_parallel", [x], [t],
+            attrs={"nest": (LoopLevel("range", 128),),
+                   "kind": "map", "iter_space": (128,),
+                   "level_map": ("warp",)})     # no backend declares it
+    g.add(op)
+    g.outputs = [op.results[0]]
+    diags = _reject(g, CompileOptions(target="pallas"), checker="dialect")
+    assert any("warp" in d.message and "hierarchy" in d.message
+               for d in diags)
+
+
+def test_level_map_length_must_match_nest():
+    t = TensorType((8, 128), F32)
+    x = Value(t)
+    g = Graph("lmlen", [x])
+    op = Op("kokkos.team_parallel", [x], [t],
+            attrs={"nest": (LoopLevel("team", 8),
+                            LoopLevel("vector", 128)),
+                   "kind": "map", "iter_space": (8, 128),
+                   "level_map": ("lane",)})     # 1 entry for 2 levels
+    g.add(op)
+    g.outputs = [op.results[0]]
+    diags = _reject(g, CompileOptions(target="pallas"), checker="dialect")
+    assert any("level_map has 1" in d.message for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# checker 1: parallel races
+# ---------------------------------------------------------------------------
+
+def _map_nest(in_shape, out_shape, nest, region=None, kind="map"):
+    t_in = TensorType(tuple(in_shape), F32)
+    t_out = TensorType(tuple(out_shape), F32)
+    x = Value(t_in)
+    g = Graph("race", [x])
+    op = Op("kokkos.range_parallel" if len(nest) == 1
+            else "kokkos.team_parallel", [x], [t_out],
+            attrs={"nest": tuple(nest), "kind": kind,
+                   "iter_space": tuple(in_shape)},
+            regions=[region] if region else None)
+    g.add(op)
+    g.outputs = [op.results[0]]
+    return g, op
+
+
+def test_race_map_nest_wider_than_output_rejected():
+    g, _ = _map_nest((4,), (4,), (LoopLevel("range", 64),))
+    diags = _reject(g, checker="race")
+    assert any("write-write" in d.message for d in diags)
+
+
+def test_race_reduce_nest_wider_than_output_is_clean():
+    # reductions legitimately have more iterations than output elements
+    g, _ = _map_nest((64,), (1,), (LoopLevel("range", 64),),
+                     kind="reduce")
+    PassManager((_noop,), verify="full").run(g, CompileOptions(target="xla"))
+
+
+def test_race_reduction_subop_inside_map_body_rejected():
+    t = TensorType((8,), F32)
+    x = Value(t)
+    arg = Value(t)
+    sub = Op("linalg.reduce_sum", [arg], [t])
+    region = Region([arg], [sub], [sub.results[0]])
+    g = Graph("race_red", [x])
+    op = Op("kokkos.range_parallel", [x], [t],
+            attrs={"nest": (LoopLevel("range", 8),), "kind": "map",
+                   "iter_space": (8,)}, regions=[region])
+    g.add(op)
+    g.outputs = [op.results[0]]
+    diags = _reject(g, checker="race")
+    assert any("reduction sub-op" in d.message for d in diags)
+    # op attribution points at the sub-op inside the nest path
+    race = [d for d in diags if d.checker == "race"][0]
+    assert race.op == "linalg.reduce_sum"
+    assert "kokkos.range_parallel" in race.path
+
+
+def test_race_seeded_non_injective_index_map_rejected():
+    """The documented seeding hook: a fused-region sub-op declaring a
+    non-injective index_map (two nest levels writing the same output
+    dim) is a race even when trip counts look benign."""
+    t = TensorType((8, 8), F32)
+    x = Value(t)
+    arg = Value(t)
+    sub = Op("linalg.relu", [arg], [t], attrs={"index_map": (0, 0)})
+    region = Region([arg], [sub], [sub.results[0]])
+    g = Graph("race_imap", [x])
+    op = Op("kokkos.team_parallel", [x], [t],
+            attrs={"nest": (LoopLevel("team", 8),
+                            LoopLevel("vector", 8)),
+                   "kind": "map", "iter_space": (8, 8)},
+            regions=[region])
+    g.add(op)
+    g.outputs = [op.results[0]]
+    diags = _reject(g, checker="race")
+    assert any("index_map" in d.message for d in diags)
+
+
+def test_race_injective_index_map_is_clean():
+    t = TensorType((8, 8), F32)
+    x = Value(t)
+    arg = Value(t)
+    sub = Op("linalg.relu", [arg], [t], attrs={"index_map": (0, 1)})
+    region = Region([arg], [sub], [sub.results[0]])
+    g = Graph("imap_ok", [x])
+    op = Op("kokkos.team_parallel", [x], [t],
+            attrs={"nest": (LoopLevel("team", 8),
+                            LoopLevel("vector", 8)),
+                   "kind": "map", "iter_space": (8, 8)},
+            regions=[region])
+    g.add(op)
+    g.outputs = [op.results[0]]
+    PassManager((_noop,), verify="full").run(g, CompileOptions(target="xla"))
+
+
+# ---------------------------------------------------------------------------
+# checker 2: DualView sync state
+# ---------------------------------------------------------------------------
+
+def _dual_graph(with_sync: bool, double_sync: bool = False):
+    t_dual = TensorType((4,), F32, MemorySpace.DUAL)
+    t = TensorType((4,), F32)
+    g = Graph("dual", [])
+    const = Op("tensor.constant", [], [t_dual],
+               attrs={"value": np.zeros(4, np.float32)})
+    g.add(const)
+    v = const.results[0]
+    if with_sync:
+        g.add(Op("kokkos.sync", [v], [],
+                 attrs={"space": "device", "lazy": True}))
+    if double_sync:
+        g.add(Op("kokkos.sync", [v], [],
+                 attrs={"space": "device", "lazy": True}))
+    use = Op("linalg.relu", [v], [t], attrs={"exec_space": "device"})
+    g.add(use)
+    g.outputs = [use.results[0]]
+    return g
+
+
+def test_sync_device_read_of_host_dual_without_sync_rejected():
+    diags = _reject(_dual_graph(with_sync=False), checker="sync")
+    sync = [d for d in diags if d.checker == "sync"][0]
+    assert "device read" in sync.message
+    assert "kokkos.sync" in sync.hint     # the fix hint names the cure
+    assert sync.op == "linalg.relu"
+
+
+def test_sync_after_kokkos_sync_is_clean():
+    g = _dual_graph(with_sync=True)
+    out = PassManager((_noop,), verify="full").run(
+        g, CompileOptions(target="xla"))
+    assert not getattr(out, "diagnostics", ())
+
+
+def test_sync_redundant_double_sync_warns_but_passes():
+    g = _dual_graph(with_sync=True, double_sync=True)
+    out = PassManager((_noop,), verify="full").run(
+        g, CompileOptions(target="xla"))
+    diags = list(getattr(out, "diagnostics", ()))
+    assert diags and all(d.severity == "warning" for d in diags)
+    assert any("redundant" in d.message for d in diags)
+
+
+def test_sync_modify_dirties_and_requires_resync():
+    """modify{host} after a device sync invalidates the device copy —
+    the next device read without a new sync is an error again."""
+    t_dual = TensorType((4,), F32, MemorySpace.DUAL)
+    t = TensorType((4,), F32)
+    g = Graph("dual_mod", [])
+    const = Op("tensor.constant", [], [t_dual],
+               attrs={"value": np.zeros(4, np.float32)})
+    g.add(const)
+    v = const.results[0]
+    g.add(Op("kokkos.sync", [v], [], attrs={"space": "device",
+                                            "lazy": True}))
+    g.add(Op("kokkos.modify", [v], [], attrs={"space": "host"}))
+    use = Op("linalg.relu", [v], [t], attrs={"exec_space": "device"})
+    g.add(use)
+    g.outputs = [use.results[0]]
+    _reject(g, checker="sync")
+
+
+# ---------------------------------------------------------------------------
+# checker 3: scratch budget
+# ---------------------------------------------------------------------------
+
+TINY_HIERARCHY = ParallelHierarchy(
+    exec_space="device",
+    levels=(LevelSpec("grid"), LevelSpec("block", width=8),
+            LevelSpec("lane", width=128)),
+    scratch_bytes=1024, compute_unit=128)
+
+
+def _tiled_nest(block, n_extra_subops=0):
+    t = TensorType((4096,), F32)
+    x = Value(t)
+    g = Graph("scratch", [x])
+    region = None
+    if n_extra_subops:
+        arg = Value(t)
+        subs, prev = [], arg
+        for _ in range(n_extra_subops):
+            s = Op("linalg.relu", [prev], [t])
+            subs.append(s)
+            prev = s.results[0]
+        region = Region([arg], subs, [prev])
+    op = Op("kokkos.range_parallel", [x], [t],
+            attrs={"nest": (LoopLevel("range", 4096),), "kind": "map",
+                   "iter_space": (4096,), "tiling": {"block": block,
+                                                     "grid": (1,)}},
+            regions=[region] if region else None)
+    g.add(op)
+    g.outputs = [op.results[0]]
+    return g
+
+
+def test_scratch_over_budget_nest_rejected():
+    # 4096 f32 x (1 operand + 1 output) = 32 KiB >> 1 KiB budget
+    g = _tiled_nest((4096,))
+    diags = _reject(g, CompileOptions(target="pallas",
+                                      hierarchy=TINY_HIERARCHY),
+                    checker="scratch")
+    d = [x for x in diags if x.checker == "scratch"][0]
+    assert "scratch_bytes=1024" in d.message
+    assert "shrink the tiling" in d.hint
+
+
+def test_scratch_fused_intermediates_count():
+    """A block that fits with one buffer overflows once the fused
+    region's intermediates (resident for the block's lifetime) are
+    counted — the footprint must include them."""
+    ok = _tiled_nest((64,))                     # 64*4*2 = 512 B: fits
+    PassManager((_noop,), verify="full").run(
+        ok, CompileOptions(target="pallas", hierarchy=TINY_HIERARCHY))
+    over = _tiled_nest((64,), n_extra_subops=8)  # ×9 buffers: 2304 B
+    _reject(over, CompileOptions(target="pallas",
+                                 hierarchy=TINY_HIERARCHY),
+            checker="scratch")
+
+
+def test_scratch_gemm_panels_rejected_over_tiny_budget():
+    t = TensorType((64, 64), F32)
+    a, b = Value(t), Value(t)
+    g = Graph("gemm_scratch", [a, b])
+    op = Op("kk.gemm", [a, b], [t],
+            attrs={"tiling": {"bm": 64, "bn": 64, "bk": 64}})
+    g.add(op)
+    g.outputs = [op.results[0]]
+    _reject(g, CompileOptions(target="pallas", hierarchy=TINY_HIERARCHY),
+            checker="scratch")
+
+
+def test_scratch_default_hierarchy_accepts_decided_tilings():
+    # what the real passes decide against the declared 96 MiB budget
+    # must verify clean (the checker re-checks the deciders' output)
+    g = _trace(lambda x: ops.relu(x), (64, 256))
+    with use_options(CompileOptions(target="pallas",
+                                    verify_ir="full")) as o:
+        from repro.core.passes import run_pipeline
+        out = run_pipeline(g, o)
+    assert not [d for d in getattr(out, "diagnostics", ())
+                if d.severity == "error"]
+
+
+# ---------------------------------------------------------------------------
+# checker 4: paged alias (the allocator's CoW contract)
+# ---------------------------------------------------------------------------
+
+def _paged_types(n_blocks=8, heads=2, bs=4, hd=8, slots=2, mb=3):
+    return (TensorType((n_blocks, heads, bs, hd), F32),
+            TensorType((slots, mb), "int32"),
+            TensorType((slots,), "int32"),
+            TensorType((slots, heads, hd), F32),
+            TensorType((2,), "int32"))
+
+
+def test_paged_shared_block_write_without_fork_rejected():
+    t_pool, t_tab, t_len, t_kv, _ = _paged_types()
+    pool, tab, ln, kv = (Value(t_pool), Value(t_tab), Value(t_len),
+                         Value(t_kv))
+    g = Graph("cow", [pool, tab, ln, kv])
+    op = Op("paged.append", [pool, tab, ln, kv], [t_pool],
+            attrs={"block_size": 4, "shared_block_ids": (3, 5)})
+    g.add(op)
+    g.outputs = [op.results[0]]
+    diags = _reject(g, checker="paged-alias")
+    d = [x for x in diags if x.checker == "paged-alias"][0]
+    assert "[3, 5]" in d.message
+    assert "fork" in d.hint
+
+
+def test_paged_fork_before_shared_write_is_clean():
+    t_pool, t_tab, t_len, t_kv, t_ids = _paged_types()
+    pool, tab, ln, kv = (Value(t_pool), Value(t_tab), Value(t_len),
+                         Value(t_kv))
+    ids_s, ids_d = Value(t_ids), Value(t_ids)
+    g = Graph("cow_ok", [pool, tab, ln, kv, ids_s, ids_d])
+    fork = Op("paged.copy", [pool, pool, ids_s, ids_d], [t_pool],
+              attrs={"block_size": 4, "fork_block_ids": (3, 5)})
+    g.add(fork)
+    app = Op("paged.append", [fork.results[0], tab, ln, kv], [t_pool],
+             attrs={"block_size": 4, "shared_block_ids": (3, 5)})
+    g.add(app)
+    g.outputs = [app.results[0]]
+    PassManager((_noop,), verify="full").run(g, CompileOptions(target="xla"))
+
+
+def test_paged_alias_end_to_end_through_real_pipeline():
+    """The attrs survive paged_to_kokkos (spread into the lowered
+    kokkos.page_* ops), so a verifying compile of a traced serving step
+    rejects the unforked shared write and accepts the forked one."""
+    bs, heads, hd, nb, slots, mb = 4, 2, 8, 8, 2, 3
+    specs = (jax.ShapeDtypeStruct((nb, heads, bs, hd), F32),
+             jax.ShapeDtypeStruct((slots, mb), "int32"),
+             jax.ShapeDtypeStruct((slots,), "int32"),
+             jax.ShapeDtypeStruct((slots, heads, hd), F32),
+             jax.ShapeDtypeStruct((1,), "int32"),
+             jax.ShapeDtypeStruct((1,), "int32"))
+
+    def bad(pool, tab, ln, kv, src, dst):
+        return ops.page_append(pool, tab, ln, kv, block_size=bs,
+                               shared_block_ids=(2,))
+
+    def good(pool, tab, ln, kv, src, dst):
+        pool = ops.page_copy(pool, pool, src, dst, block_size=bs,
+                             fork_block_ids=(2,))
+        return ops.page_append(pool, tab, ln, kv, block_size=bs,
+                               shared_block_ids=(2,))
+
+    with pytest.raises(IRVerificationError) as ei:
+        pipeline.compile(bad, *specs, options=CompileOptions(
+            target="xla", verify_ir="full"))
+    assert any(d.checker == "paged-alias" for d in ei.value.diagnostics)
+
+    mod = pipeline.compile(good, *specs, options=CompileOptions(
+        target="xla", verify_ir="full"))
+    assert not [d for d in getattr(mod.graph, "diagnostics", ())
+                if d.severity == "error"]
+    # the alias declarations survive into the lowered IR and its dump
+    dump = mod.print_ir()
+    assert "shared_block_ids" in dump and "fork_block_ids" in dump
+
+
+def test_allocator_exports_rc_invariant():
+    from repro.runtime.scheduler import BlockAllocator, ContinuousScheduler
+    alloc = BlockAllocator(8)
+    ids = alloc.alloc(3)
+    assert alloc.shared_blocks() == ()
+    alloc.share([ids[1]])
+    assert alloc.shared_blocks() == (ids[1],)
+    sched = ContinuousScheduler(2, alloc, block_size=4,
+                                max_blocks_per_slot=4)
+    assert sched.alias_invariant() == {"shared_blocks": (ids[1],)}
+    alloc.release([ids[1]])
+    assert alloc.shared_blocks() == ()
+
+
+# ---------------------------------------------------------------------------
+# framework: def-use and alias sets
+# ---------------------------------------------------------------------------
+
+def test_def_use_descends_into_regions():
+    g = _trace(lambda x: ops.relu(ops.add(x, x)), (8, 16))
+    from repro.core.passes import fuse_elementwise
+    with use_options(CompileOptions(target="pallas")):
+        fuse_elementwise(g)
+    du = analysis.def_use(g)
+    fused = [op for op in g.ops if op.opname == "kokkos.fused"]
+    assert fused, "fusion did not fire"
+    region = fused[0].regions[0]
+    # block args are defs; sub-op uses are recorded with region paths
+    for arg in region.inputs:
+        assert du.defs[arg.id][0] == "block-arg"
+        assert any(u[0] in region.ops for u in du.uses.get(arg.id, []))
+    for sub in region.ops:
+        for r in sub.results:
+            assert du.defs[r.id][0] == "sub-op"
+
+
+def test_alias_sets_see_through_paged_and_pack():
+    t_pool, t_tab, t_len, t_kv, _ = _paged_types()
+    pool, tab, ln, kv = (Value(t_pool), Value(t_tab), Value(t_len),
+                         Value(t_kv))
+    g = Graph("alias", [pool, tab, ln, kv])
+    app = Op("paged.append", [pool, tab, ln, kv], [t_pool],
+             attrs={"block_size": 4})
+    g.add(app)
+    g.outputs = [app.results[0]]
+    als = analysis.buffer_alias_sets(g)
+    assert als.same(app.results[0].id, pool.id)      # functional update
+    assert not als.same(app.results[0].id, kv.id)    # kv is read-only
+
+
+# ---------------------------------------------------------------------------
+# every registered pass maps verifier-clean graphs to verifier-clean
+# graphs on every backend (randomized IR fuzz)
+# ---------------------------------------------------------------------------
+
+def _random_fn(seed: int):
+    rng = random.Random(seed)
+    n_ops = rng.randint(2, 5)
+    w = np.asarray(np.random.default_rng(seed).standard_normal((16, 16)),
+                   dtype=np.float32)
+
+    def fn(x):
+        h = x
+        for _ in range(n_ops):
+            kind = rng.choice(["relu", "add", "mul", "exp", "matmul",
+                               "softmax"])
+            if kind == "relu":
+                h = ops.relu(h)
+            elif kind == "add":
+                h = ops.add(h, h)
+            elif kind == "mul":
+                h = ops.mul(h, h)
+            elif kind == "exp":
+                h = ops.exp(h)
+            elif kind == "matmul":
+                h = ops.matmul(h, ops.constant(w))
+            else:
+                h = ops.softmax(h)
+        return h
+    return fn
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fuzz_every_pass_preserves_verifier_cleanliness(seed):
+    for backend in _ALL_BACKENDS:
+        fn = _random_fn(seed)             # fresh rng: same ops per backend
+        g = _trace(fn, (8, 16))
+        opts = CompileOptions(target=backend.name)
+        pm = PassManager(backend.pipeline, verify="full")
+        out = pm.run(g, opts)             # raises if any pass dirties it
+        assert not [d for d in getattr(out, "diagnostics", ())
+                    if d.severity == "error"]
+
+
+# ---------------------------------------------------------------------------
+# demo + golden modules analyze clean; diagnostics ride into emitted text
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("demo", sorted(pipeline._DEMOS))
+@pytest.mark.parametrize("target", ["xla", "loops"])
+def test_demo_graphs_analyze_clean(demo, target):
+    fn, specs, _ = pipeline._DEMOS[demo]()
+    mod = pipeline.compile(fn, *specs, options=CompileOptions(
+        target=target, verify_ir="full"))
+    assert not [d for d in getattr(mod.graph, "diagnostics", ())
+                if d.severity == "error"]
+
+
+def test_golden_translate_modules_analyze_clean():
+    import test_translate
+    for name, backend in test_translate._CASES:
+        fn, specs = test_translate._GRAPHS[name]()
+        mod = pipeline.compile(fn, *specs, options=CompileOptions(
+            target=backend, verify_ir="full"), name=name)
+        errs = [d for d in getattr(mod.graph, "diagnostics", ())
+                if d.severity == "error"]
+        assert not errs, (name, backend, [d.format() for d in errs])
+
+
+def test_analyze_cli_reports_clean(capsys):
+    assert pipeline.main(["--demo", "paged_swap", "--target", "loops",
+                          "--analyze"]) == 0
+    out = capsys.readouterr().out
+    assert "analysis: paged_swap" in out
+    assert "errors: 0" in out and "clean" in out
+
+
+def test_diagnostics_ride_into_emitted_source():
+    from repro.core import emitter, translate
+    fn, specs, _ = pipeline._DEMOS["mlp"]()
+    opts = CompileOptions(target="loops")
+    mod = pipeline.compile(fn, *specs, options=opts)
+    analysis.record_diagnostics(mod.graph, [Diagnostic(
+        "warning", "sync", "kokkos.sync", "mlp/kokkos.sync",
+        "redundant sync", "drop it", "memory_space_management")])
+    py = emitter.emit_python_source(mod.graph, opts)
+    assert "# analysis: warning[sync]" in py
+    cpp = translate.emit_cpp_source(mod.graph, opts)
+    assert "// analysis: warning[sync]" in cpp
+
+
+def test_diagnostic_format_carries_all_fields():
+    d = Diagnostic("error", "race", "kokkos.fused", "m/kokkos.fused(%7)",
+                   "write-write", "shrink the nest", "map_parallelism")
+    s = d.format()
+    for tok in ("error", "race", "map_parallelism", "kokkos.fused(%7)",
+                "write-write", "shrink the nest"):
+        assert tok in s
+    assert isinstance(AnalysisError(diagnostics=(d,)).diagnostics[0],
+                      Diagnostic)

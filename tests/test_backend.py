@@ -149,8 +149,8 @@ def test_passmanager_statistics_shape():
 def test_passmanager_print_ir_after_all_sink():
     g = _trace(lambda x, y: ops.matmul(x, y), (3, 4), (4, 5))
     dumped = []
-    pm = PassManager(("linalg_to_library",), print_ir_after_all=True,
-                     sink=dumped.append)
+    pm = PassManager(("linalg_to_library",), verify="full",
+                     print_ir_after_all=True, sink=dumped.append)
     pm.run(g, CompileOptions(target="xla"))
     assert any("IR after linalg_to_library" in line for line in dumped)
     assert any("kk.gemm" in line for line in dumped)

@@ -183,7 +183,8 @@ def test_fused_region_in_print_ir_after_all_dump(rng):
     g = tracer.trace(_fused_mlp(rng),
                      jax.ShapeDtypeStruct((8, 16), "float32"))
     dumped = []
-    pm = PassManager(None, print_ir_after_all=True, sink=dumped.append)
+    pm = PassManager(None, verify="full", print_ir_after_all=True,
+                     sink=dumped.append)
     with use_options(CompileOptions(target="loops")) as o:
         pm.run(g, o)
     dump = "\n".join(dumped)

@@ -58,7 +58,8 @@ def test_map_parallelism_ir_dump_per_backend(target):
     g = _trace(lambda x: ops.relu(x), (4, 16, 128))
     dumped = []
     pm = PassManager(("linalg_to_parallel", "map_parallelism"),
-                     print_ir_after_all=True, sink=dumped.append)
+                     verify="full", print_ir_after_all=True,
+                     sink=dumped.append)
     with use_options(CompileOptions(target=target)) as o:
         pm.run(g, o)
     dump = "\n".join(dumped)
