@@ -1,0 +1,106 @@
+"""Native build harness for lapis-translate output — build and RUN every
+golden translation unit.
+
+The translate goldens pin emitted *text*; this harness pins emitted
+*behaviour*: each ``tests/golden/translate/*.cpp`` unit is compiled as a
+standalone executable (its ``main`` runs the entry function on
+zero-filled placeholder inputs and prints ``<name> checksum: <v>``) and
+executed, so a unit that stops compiling, linking, or running fails the
+harness even if its text still matches the golden.  Builds use real
+Kokkos when ``$KOKKOS_ROOT`` points at an install prefix (adding
+``-fopenmp`` for ``Kokkos::OpenMP`` units), else the executable serial
+stub in ``tests/kokkos_stub/`` — the zero-install CI path.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.native_build             # build all
+    PYTHONPATH=src python -m benchmarks.native_build --run       # build + run
+    PYTHONPATH=src python -m benchmarks.native_build --run \\
+        --unit matmul_openmp                                     # one unit
+    PYTHONPATH=src python -m benchmarks.native_build \\
+        --goldens tests/golden/translate --out /tmp/lapis-exe
+
+Exit status is the number of failed units (0 = all green), so CI can use
+it directly.  ``tests/native/`` wraps the same flow in a Makefile for
+hand-driven builds.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import subprocess
+import sys
+import time
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.core import native  # noqa: E402
+
+
+def discover_units(goldens: pathlib.Path, unit: str = None):
+    pats = f"{unit}.cpp" if unit else "*.cpp"
+    units = sorted(goldens.glob(pats))
+    if not units:
+        raise SystemExit(f"no units matching {pats!r} under {goldens}")
+    return units
+
+
+def build_and_run(src: pathlib.Path, out_dir: pathlib.Path,
+                  run: bool) -> tuple:
+    """Returns (ok, message) for one golden unit."""
+    t0 = time.perf_counter()
+    try:
+        exe = native.build_exe(src, out_dir)
+    except native.NativeBuildError as e:
+        return False, f"BUILD FAIL: {e}"
+    msg = f"built in {time.perf_counter() - t0:.2f}s"
+    if not run:
+        return True, msg
+    proc = subprocess.run([str(exe)], capture_output=True, text=True,
+                          timeout=120)
+    out = proc.stdout.strip()
+    if proc.returncode != 0:
+        return False, f"RUN FAIL (exit {proc.returncode}): {proc.stderr[:200]}"
+    if "checksum:" not in out:
+        return False, f"RUN FAIL: no checksum line in output {out!r}"
+    return True, f"{msg}; {out}"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="build (and run) every golden Kokkos translation unit")
+    p.add_argument("--goldens", default=str(_REPO_ROOT / "tests" / "golden"
+                                            / "translate"),
+                   help="directory of emitted .cpp units "
+                        "(default: %(default)s)")
+    p.add_argument("--out", default=str(_REPO_ROOT / "build" / "native"),
+                   help="where executables land (default: %(default)s)")
+    p.add_argument("--run", action="store_true",
+                   help="also execute each built unit and require a "
+                        "checksum line")
+    p.add_argument("--unit", default=None, metavar="STEM",
+                   help="build only this unit (golden file stem, e.g. "
+                        "matmul_openmp)")
+    args = p.parse_args(argv)
+
+    goldens = pathlib.Path(args.goldens)
+    out_dir = pathlib.Path(args.out)
+    root = native.kokkos_root()
+    flavour = (f"real Kokkos at {root}" if root
+               else f"executable stub at {native.stub_include_dir()}")
+    print(f"# toolchain: {native.compiler()}  ({flavour})")
+
+    failures = 0
+    for src in discover_units(goldens, args.unit):
+        ok, msg = build_and_run(src, out_dir, args.run)
+        status = "ok " if ok else "FAIL"
+        print(f"[{status}] {src.stem:24s} {msg}")
+        failures += 0 if ok else 1
+    total = len(discover_units(goldens, args.unit))
+    print(f"# {total - failures}/{total} units green")
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

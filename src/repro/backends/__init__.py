@@ -9,3 +9,4 @@ re-imports are safe.
 """
 from repro.backends import builtin as _builtin    # noqa: F401
 from repro.backends import loops as _loops        # noqa: F401
+from repro.backends import openmp as _openmp      # noqa: F401

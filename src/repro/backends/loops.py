@@ -135,7 +135,11 @@ def _parallel_nest_loops(op, options):
     return run
 
 
-def _loops_executor(op, options):
+def loops_executor(op, options):
+    """Claim mapped ``kokkos.*`` nests for serial-tile interpretation.
+    Public: other host-shaped plugin backends (e.g. the data-declared
+    ``openmp`` backend) reuse this executor — a new architecture is a new
+    *declaration*, not a new interpreter."""
     if op.opname in ("kokkos.range_parallel", "kokkos.team_parallel"):
         return _parallel_nest_loops(op, options)
     if op.opname == "kokkos.fused":
@@ -192,7 +196,7 @@ register_backend(Backend(
                             "ell-layout"}),
     hierarchy=SERIAL_HIERARCHY,
     fallbacks=("xla",),
-    op_executor=_loops_executor,
+    op_executor=loops_executor,
     # lapis-translate spelling: none declared — the host exec_space above
     # already resolves to Kokkos::Serial (Backend.resolve_translate_target)
 ))

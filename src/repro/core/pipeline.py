@@ -245,10 +245,16 @@ translation outputs:
                     parallel_for nests, DualView syncs.  PATH '-' prints
                     to stdout.  Syntax-check with
                     g++ -std=c++17 -fsyntax-only -I tests/kokkos_stub
+  --run-native      compile the C++ unit (real Kokkos when $KOKKOS_ROOT
+                    is set, else the executable tests/kokkos_stub), load
+                    it via ctypes through the C-ABI harness, run the demo
+                    inputs through BOTH the jax callable and the native
+                    binary, and diff (exit 1 past 1e-4)
 
 examples:
   python -m repro.core.pipeline --demo mlp --emit-cpp -
   python -m repro.core.pipeline --demo spmv --target loops --emit-cpp out.cpp
+  python -m repro.core.pipeline --demo paged --target openmp --run-native
   python -m repro.core.pipeline --demo mlp --print-ir-after-all
 """
 
@@ -269,6 +275,11 @@ def main(argv=None) -> int:
     p.add_argument("--emit-cpp", default=None, metavar="PATH",
                    help="write a freestanding Kokkos C++ translation unit "
                         "here ('-' for stdout)")
+    p.add_argument("--run-native", action="store_true",
+                   help="build + ctypes-load the emitted Kokkos C++ unit "
+                        "and diff its outputs against the jax callable on "
+                        "the demo inputs (differential oracle; exit 1 on "
+                        "mismatch past 1e-4)")
     p.add_argument("--print-ir", action="store_true")
     p.add_argument("--print-ir-after-all", action="store_true",
                    help="dump IR after every pass (PassManager)")
@@ -340,6 +351,20 @@ def main(argv=None) -> int:
         print("wrote", mod.save_cpp(args.emit_cpp))
     y = mod(*example)
     print("output shape:", y.shape, "sum:", float(y.sum()))
+    if args.run_native:
+        import numpy as np
+
+        from repro.core import native
+        nat = native.load_native(mod)
+        y_nat = nat(*example)
+        diff = float(np.max(np.abs(np.asarray(y) - y_nat)))
+        flavour = "real Kokkos" if native.kokkos_root() else "executable stub"
+        print(f"native ({flavour}, {nat.path.name}): "
+              f"max |jax - native| = {diff:.3e}")
+        if diff > 1e-4:
+            print("NATIVE MISMATCH: emitted C++ disagrees with the "
+                  "compiled jax callable")
+            return 1
     return 0
 
 

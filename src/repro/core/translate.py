@@ -40,11 +40,23 @@ Anything the dialect cannot express as data (a Python closure in
 :class:`TranslateError` — by design: this layer is where any remaining
 closure leakage in the IR is forced into the open.
 
+Each unit carries THREE entry surfaces:
+
+* the typed entry function (the paper's ``kokkosModule.forward``);
+* a ``main`` that runs it on zero-filled inputs and prints a checksum;
+* a C-ABI harness — ``extern "C" void lapis_run(const float** ins,
+  float** outs)`` plus shape/arity/dtype descriptor functions — so the
+  native build (``repro.core.native``) can ctypes-load the compiled
+  shared object and push the *same* test inputs through the jax callable
+  and the native binary (the differential oracle).  ``lapis_initialize``
+  is idempotent so a loaded unit survives repeated entry.
+
 Emitted text is deterministic (walk-ordered value names from
 :class:`~repro.core.irwalk.ValueNamer`, sorted attr printing), which is
 what the golden-file tests in ``tests/test_translate.py`` pin, and the
-unit syntax-checks against the Kokkos API surface modeled by
-``tests/kokkos_stub/`` (``g++ -std=c++17 -fsyntax-only``).
+unit compiles, links and *runs* against the executable serial Kokkos
+subset in ``tests/kokkos_stub/`` (or a real Kokkos install via
+``$KOKKOS_ROOT`` — see ``benchmarks/native_build.py``).
 """
 from __future__ import annotations
 
@@ -107,6 +119,30 @@ def _view(rank: int, ctype: str) -> str:
     if rank < 1 or rank > 4:
         raise TranslateError(f"no Kokkos view alias for rank-{rank} tensors")
     return f"LapisView{rank}<{ctype}>"
+
+
+# The C-ABI dtype descriptor: ``lapis_input_dtype(i)`` /
+# ``lapis_output_dtype()`` return these codes so the ctypes loader
+# (repro.core.native) knows how to reinterpret each ``lapis_run`` buffer
+# pointer.  Kept as the single source of truth — native.py imports it.
+CABI_DTYPE_CODES = {"float": 0, "int32_t": 1, "int64_t": 2, "bool": 3}
+CABI_MAX_RANK = 4
+
+
+def _dtype_code(ctype: str) -> int:
+    try:
+        return CABI_DTYPE_CODES[ctype]
+    except KeyError:
+        raise TranslateError(
+            f"no C-ABI dtype code for element type {ctype!r}")
+
+
+def _flat_index(shape) -> str:
+    """Dense row-major flat-index expression over ``i0..iN`` vars."""
+    expr = "i0"
+    for d in range(1, len(shape)):
+        expr = f"({expr}) * {shape[d]} + i{d}"
+    return expr
 
 
 # ---------------------------------------------------------------------------
@@ -855,8 +891,13 @@ class _CppEmitter:
         lines = ["// paper §4.4: lapis_initialize allocates the globally",
                  "// scoped weight Views and populates their host mirrors;",
                  "// the kokkos.sync ops in the entry function trigger the",
-                 "// lazy h2d copies (LAPIS::DualView).",
-                 "void lapis_initialize() {"]
+                 "// lazy h2d copies (LAPIS::DualView).  Idempotent: a",
+                 "// ctypes-loaded unit calls it on every lapis_run entry,",
+                 "// and re-entry must not re-allocate the global Views.",
+                 "void lapis_initialize() {",
+                 "  static bool lapis_initialized = false;",
+                 "  if (lapis_initialized) return;",
+                 "  lapis_initialized = true;"]
         for label, value in self.weights:
             ct = _ctype(str(value.dtype))
             dims = ", ".join(str(d) for d in value.shape)
@@ -870,6 +911,122 @@ class _CppEmitter:
         lines.append("void lapis_finalize() {")
         for label, _ in self.weights:
             lines.append(f"  lapis_{label} = {{}};")
+        lines.append("}")
+        return lines
+
+    def cabi_fns(self) -> list:
+        """The C-ABI harness: shape/arity/dtype descriptor functions plus
+        ``lapis_run``, the uniform pointer-table entry the ctypes loader
+        (repro.core.native) drives.  ``ins``/``outs`` are tables of dense
+        row-major buffers, each reinterpreted per the dtype descriptor."""
+        ins = list(self.graph.inputs)
+        out = self.graph.outputs[0]
+        out_shape = out.type.shape
+        out_ct = _ctype(out.type.dtype)
+        lines = [
+            "// " + "-" * 74,
+            "// C-ABI entry point: the native differential harness "
+            "(repro.core.native)",
+            "// loads the compiled unit with ctypes and drives lapis_run "
+            "with the same",
+            "// inputs the jax callable sees.  Buffer pointers are "
+            "reinterpreted per the",
+            "// dtype descriptor (0=float32 1=int32 2=int64 3=bool), "
+            "dense row-major.",
+            "// " + "-" * 74,
+            f'extern "C" int lapis_num_inputs() {{ return {len(ins)}; }}',
+            'extern "C" int lapis_num_outputs() { return 1; }',
+        ]
+        if ins:
+            ranks = ", ".join(str(len(v.type.shape)) for v in ins)
+            lines += [
+                'extern "C" int lapis_input_rank(int i) {',
+                f"  static const int r[{len(ins)}] = {{{ranks}}};",
+                "  return r[i];",
+                "}",
+            ]
+            rows = []
+            for v in ins:
+                dims = list(v.type.shape) + \
+                    [0] * (CABI_MAX_RANK - len(v.type.shape))
+                rows.append("{" + ", ".join(str(d) for d in dims) + "}")
+            lines += [
+                'extern "C" long long lapis_input_dim(int i, int d) {',
+                f"  static const long long dims[{len(ins)}]"
+                f"[{CABI_MAX_RANK}] = {{",
+                "    " + ", ".join(rows) + "};",
+                "  return dims[i][d];",
+                "}",
+                'extern "C" int lapis_input_dtype(int i) {',
+                f"  static const int t[{len(ins)}] = "
+                "{" + ", ".join(str(_dtype_code(_ctype(v.type.dtype)))
+                                for v in ins) + "};",
+                "  return t[i];",
+                "}",
+            ]
+        else:
+            lines += [
+                'extern "C" int lapis_input_rank(int) { return -1; }',
+                'extern "C" long long lapis_input_dim(int, int) '
+                "{ return 0; }",
+                'extern "C" int lapis_input_dtype(int) { return -1; }',
+            ]
+        out_dims = ", ".join(str(d) for d in out_shape)
+        lines += [
+            f'extern "C" int lapis_output_rank() '
+            f"{{ return {len(out_shape)}; }}",
+            'extern "C" long long lapis_output_dim(int d) {',
+            f"  static const long long dims[{len(out_shape)}] = "
+            f"{{{out_dims}}};",
+            "  return dims[d];",
+            "}",
+            f'extern "C" int lapis_output_dtype() '
+            f"{{ return {_dtype_code(out_ct)}; }}",
+            "",
+            "// idempotent process setup: safe to call once per "
+            "lapis_run entry",
+            'extern "C" void lapis_setup() {',
+            "  if (!Kokkos::is_initialized()) Kokkos::initialize();",
+            "  lapis_initialize();",
+            "}",
+            "",
+            'extern "C" void lapis_run(const float** ins, float** outs) {',
+            "  lapis_setup();",
+        ]
+        arg_names = []
+        for k, v in enumerate(ins):
+            name = self.namer.name(v)
+            arg_names.append(name)
+            ct = _ctype(v.type.dtype)
+            shape = v.type.shape
+            dims = ", ".join(str(d) for d in shape)
+            lines.append(f"  {_view(len(shape), ct)} {name}("
+                         f"\"{name}\", {dims});")
+            lines.append("  {")
+            lines.append(f"    const {ct}* src{k} = "
+                         f"reinterpret_cast<const {ct}*>(ins[{k}]);")
+            for d, extent in enumerate(shape):
+                pad = "    " + "  " * d
+                lines.append(f"{pad}for (int i{d} = 0; i{d} < {extent}; "
+                             f"++i{d})")
+            pad = "    " + "  " * len(shape)
+            idx = ", ".join(f"i{d}" for d in range(len(shape)))
+            lines.append(f"{pad}{name}({idx}) = "
+                         f"src{k}[{_flat_index(shape)}];")
+            lines.append("  }")
+        lines.append(f"  const auto lapis_out = {self.graph.name}("
+                     f"{', '.join(arg_names)});")
+        lines.append("  const auto lapis_host = Kokkos::create_mirror_"
+                     "view_and_copy(Kokkos::HostSpace(), lapis_out);")
+        lines.append(f"  {out_ct}* dst = "
+                     f"reinterpret_cast<{out_ct}*>(outs[0]);")
+        for d, extent in enumerate(out_shape):
+            pad = "  " + "  " * d
+            lines.append(f"{pad}for (int i{d} = 0; i{d} < {extent}; ++i{d})")
+        pad = "  " + "  " * len(out_shape)
+        idx = ", ".join(f"i{d}" for d in range(len(out_shape)))
+        lines.append(f"{pad}dst[{_flat_index(out_shape)}] = "
+                     f"static_cast<{out_ct}>(lapis_host({idx}));")
         lines.append("}")
         return lines
 
@@ -993,6 +1150,8 @@ class _CppEmitter:
         parts.extend(self.body)
         parts.append(f"  return {out_name};")
         parts.append("}")
+        parts.append("")
+        parts.extend(self.cabi_fns())
         parts.append("")
         parts.extend(self.main_fn())
         parts.append("")

@@ -1,18 +1,38 @@
-// Minimal Kokkos API surface stub — for `g++ -std=c++17 -fsyntax-only`
-// checks of lapis-translate output ONLY.  Not a Kokkos implementation:
-// every body is a no-op; what it models is the *types* (views are
-// rank-checked, policies take the real constructor shapes, reducers and
-// nested ranges have the real signatures), so a unit that type-checks
-// here uses the Kokkos API the way real Kokkos expects.  Used by
-// tests/test_translate.py and the CI lint job:
+// Run-capable serial Kokkos subset — the executable oracle harness for
+// lapis-translate output.  This is NOT Kokkos: it is a faithful serial
+// implementation of exactly the API surface the emitter prints (views,
+// DualViews, Range/MDRange/Team policies, nested team ranges, reducers),
+// so an emitted unit compiled against it *computes* — same numbers as a
+// real Kokkos Serial build — without a Kokkos install.  Two uses:
 //
 //   g++ -std=c++17 -fsyntax-only -I tests/kokkos_stub generated.cpp
+//     (the historical type-check lint, still supported)
+//   g++ -std=c++17 -O2 -shared -fPIC -I tests/kokkos_stub generated.cpp
+//     (an executable unit the ctypes loader in repro.core.native drives
+//      through the C-ABI entry point for differential testing)
+//
+// Semantics intentionally mirrored from Kokkos:
+//   * Views own real row-major (LayoutRight) storage with *shared*
+//     (aliasing) reference semantics — `auto b = a;` views one buffer,
+//     which the emitted in-place page_append/page_copy nests rely on.
+//   * Views zero-initialize on allocation (Kokkos default).
+//   * parallel_reduce initializes the accumulator to the reduction
+//     identity (0 for the value form, lowest()/max() for Max/Min), not
+//     to the caller's variable.
+//   * DualView's h_view and d_view share one allocation (a host build),
+//     so sync_*/modify_* are coherence no-ops.
+// Parallel dispatch runs serially (league ranks in order); emitted nests
+// are data-parallel so ordering cannot change results.
 #ifndef LAPIS_KOKKOS_STUB_CORE_HPP
 #define LAPIS_KOKKOS_STUB_CORE_HPP
 
+#include <algorithm>
 #include <cstddef>
 #include <initializer_list>
+#include <limits>
+#include <memory>
 #include <string>
+#include <type_traits>
 
 #define KOKKOS_LAMBDA [=]
 #define KOKKOS_INLINE_FUNCTION inline
@@ -29,11 +49,22 @@ template <class T> struct rank_of {
 template <class T> struct rank_of<T*> {
   static constexpr std::size_t value = rank_of<T>::value + 1;
 };
+inline bool& initialized_flag() {
+  static bool flag = false;
+  return flag;
+}
 }  // namespace Impl
 
 // -- spaces ----------------------------------------------------------------
 struct HostSpace {};
 struct Serial {
+  using memory_space = HostSpace;
+  void fence() const {}
+};
+// The spelling target of the data-declared `openmp` backend.  The stub
+// executes it serially (one host thread); a real Kokkos build dispatches
+// the same unit onto the OpenMP thread pool.
+struct OpenMP {
   using memory_space = HostSpace;
   void fence() const {}
 };
@@ -46,24 +77,41 @@ template <class Exec, class Mem> struct Device {
 struct LayoutRight {};
 struct LayoutLeft {};
 
-// -- views -----------------------------------------------------------------
+// -- views: real row-major storage, shared (aliasing) ownership ------------
 template <class DataType, class... Props>
 class View {
  public:
   using value_type = typename Impl::strip_pointers<DataType>::type;
   static constexpr std::size_t rank = Impl::rank_of<DataType>::value;
   View() = default;
-  template <class... Args> explicit View(const std::string&, Args...) {}
-  template <class... Is> value_type& operator()(Is...) const {
+  template <class... Extents>
+  explicit View(const std::string&, Extents... extents)
+      : dims_{static_cast<std::size_t>(extents)...} {
+    static_assert(sizeof...(Extents) == rank,
+                  "view constructed with the wrong number of extents");
+    std::size_t n = 1;
+    for (std::size_t d = 0; d < rank; ++d) n *= dims_[d];
+    // value-initialized: Kokkos views allocate zeroed by default
+    data_ = std::shared_ptr<value_type[]>(new value_type[n]());
+  }
+  template <class... Is> value_type& operator()(Is... is) const {
     static_assert(sizeof...(Is) == rank,
                   "view indexed with the wrong number of subscripts");
-    static value_type scratch{};
-    return scratch;
+    const std::size_t idx[rank ? rank : 1] = {
+        static_cast<std::size_t>(is)...};
+    std::size_t off = 0;
+    for (std::size_t d = 0; d < rank; ++d) off = off * dims_[d] + idx[d];
+    return data_.get()[off];
   }
-  value_type* data() const { return nullptr; }
-  std::size_t extent(int) const { return 0; }
+  value_type* data() const { return data_.get(); }
+  std::size_t extent(int d) const { return dims_[d]; }
+
+ private:
+  std::size_t dims_[rank ? rank : 1] = {};
+  std::shared_ptr<value_type[]> data_;
 };
 
+// -- DualView: host build, both mirrors share one allocation ---------------
 template <class DataType, class... Props>
 class DualView {
  public:
@@ -72,7 +120,9 @@ class DualView {
   t_dev d_view;
   t_host h_view;
   DualView() = default;
-  template <class... Args> explicit DualView(const std::string&, Args...) {}
+  template <class... Extents>
+  explicit DualView(const std::string& label, Extents... extents)
+      : d_view(label, extents...), h_view(d_view) {}
   void sync_device() {}
   void sync_host() {}
   void modify_device() {}
@@ -82,27 +132,59 @@ class DualView {
 template <class Space, class V>
 V create_mirror_view_and_copy(const Space&, const V& v) { return v; }
 
-// -- policies --------------------------------------------------------------
+// -- policies (each knows how to iterate itself, serially) -----------------
 struct AUTO_t {};
 inline constexpr AUTO_t AUTO{};
 
 template <class... Props>
 struct RangePolicy {
-  RangePolicy(long long, long long) {}
+  long long begin_, end_;
+  RangePolicy(long long b, long long e) : begin_(b), end_(e) {}
+  template <class F> void iterate(const F& f) const {
+    for (long long i = begin_; i < end_; ++i) f(static_cast<int>(i));
+  }
 };
 
 template <unsigned N> struct Rank {};
 
+namespace Impl {
+template <class... P> struct md_rank;  // undefined: MDRange needs Rank<N>
+template <unsigned N, class... P> struct md_rank<Rank<N>, P...> {
+  static constexpr unsigned value = N;
+};
+template <class H, class... P> struct md_rank<H, P...> : md_rank<P...> {};
+}  // namespace Impl
+
 template <class... Props>
 struct MDRangePolicy {
-  MDRangePolicy(std::initializer_list<long long>,
-                std::initializer_list<long long>) {}
+  static constexpr unsigned rank = Impl::md_rank<Props...>::value;
+  long long lo_[rank], hi_[rank];
+  MDRangePolicy(std::initializer_list<long long> lo,
+                std::initializer_list<long long> hi) {
+    std::copy(lo.begin(), lo.end(), lo_);
+    std::copy(hi.begin(), hi.end(), hi_);
+  }
+  template <class F> void iterate(const F& f) const { iter(f); }
+
+ private:
+  template <class F, class... Is>
+  void iter(const F& f, Is... is) const {
+    if constexpr (sizeof...(Is) == rank) {
+      f(is...);
+    } else {
+      constexpr unsigned d = sizeof...(Is);
+      for (long long i = lo_[d]; i < hi_[d]; ++i)
+        iter(f, is..., static_cast<int>(i));
+    }
+  }
 };
 
 struct TeamMember {
-  int league_rank() const { return 0; }
+  int league_rank_ = 0;
+  int league_size_ = 1;
+  int league_rank() const { return league_rank_; }
   int team_rank() const { return 0; }
-  int league_size() const { return 1; }
+  int league_size() const { return league_size_; }
   int team_size() const { return 1; }
   void team_barrier() const {}
 };
@@ -110,54 +192,104 @@ struct TeamMember {
 template <class... Props>
 struct TeamPolicy {
   using member_type = TeamMember;
-  TeamPolicy(long long, AUTO_t) {}
-  TeamPolicy(long long, AUTO_t, long long) {}
-  TeamPolicy(long long, long long) {}
-  TeamPolicy(long long, long long, long long) {}
+  long long league_;
+  TeamPolicy(long long league, AUTO_t) : league_(league) {}
+  TeamPolicy(long long league, AUTO_t, long long) : league_(league) {}
+  TeamPolicy(long long league, long long) : league_(league) {}
+  TeamPolicy(long long league, long long, long long) : league_(league) {}
+  template <class F> void iterate(const F& f) const {
+    for (long long r = 0; r < league_; ++r) {
+      TeamMember m;
+      m.league_rank_ = static_cast<int>(r);
+      m.league_size_ = static_cast<int>(league_);
+      f(m);
+    }
+  }
 };
 
-struct NestedRange {};
-inline NestedRange TeamThreadRange(const TeamMember&, long long) {
-  return {};
+struct NestedRange {
+  long long begin_, end_;
+  template <class F> void iterate(const F& f) const {
+    for (long long i = begin_; i < end_; ++i) f(static_cast<int>(i));
+  }
+};
+inline NestedRange TeamThreadRange(const TeamMember&, long long n) {
+  return {0, n};
 }
-inline NestedRange TeamThreadRange(const TeamMember&, long long,
-                                   long long) { return {}; }
-inline NestedRange ThreadVectorRange(const TeamMember&, long long) {
-  return {};
+inline NestedRange TeamThreadRange(const TeamMember&, long long b,
+                                   long long e) { return {b, e}; }
+inline NestedRange ThreadVectorRange(const TeamMember&, long long n) {
+  return {0, n};
 }
-inline NestedRange ThreadVectorRange(const TeamMember&, long long,
-                                     long long) { return {}; }
+inline NestedRange ThreadVectorRange(const TeamMember&, long long b,
+                                     long long e) { return {b, e}; }
 
 // -- dispatch --------------------------------------------------------------
-// Lambdas in emitted code have concrete parameter types, so their bodies
-// are type-checked at definition; the dispatchers never need to invoke.
 template <class Policy, class Functor>
-void parallel_for(const std::string&, const Policy&, const Functor&) {}
+void parallel_for(const std::string&, const Policy& p, const Functor& f) {
+  p.iterate(f);
+}
 template <class Policy, class Functor>
-void parallel_for(const Policy&, const Functor&) {}
+void parallel_for(const Policy& p, const Functor& f) { p.iterate(f); }
 
+// -- reducers (identity + final assignment, Kokkos semantics) --------------
 template <class T> struct Max {
+  using value_type = T;
   T& value;
   explicit Max(T& v) : value(v) {}
+  static T identity() { return std::numeric_limits<T>::lowest(); }
 };
 template <class T> struct Min {
+  using value_type = T;
   T& value;
   explicit Min(T& v) : value(v) {}
+  static T identity() { return std::numeric_limits<T>::max(); }
 };
 template <class T> struct Sum {
+  using value_type = T;
   T& value;
   explicit Sum(T& v) : value(v) {}
+  static T identity() { return T(); }
 };
 
-template <class Policy, class Functor, class Reducer>
-void parallel_reduce(const Policy&, const Functor&, Reducer&&) {}
-template <class Policy, class Functor, class Reducer>
-void parallel_reduce(const std::string&, const Policy&, const Functor&,
-                     Reducer&&) {}
+namespace Impl {
+template <class T> struct is_reducer : std::false_type {};
+template <class T> struct is_reducer<Max<T>> : std::true_type {};
+template <class T> struct is_reducer<Min<T>> : std::true_type {};
+template <class T> struct is_reducer<Sum<T>> : std::true_type {};
+}  // namespace Impl
 
-inline void initialize(int&, char**) {}
-inline void initialize() {}
-inline void finalize() {}
+// reducer-wrapper form: Kokkos initializes the thread accumulator to the
+// reducer's identity and writes the joined result back at the end
+template <class Policy, class Functor, class Reducer>
+auto parallel_reduce(const Policy& p, const Functor& f, Reducer&& r)
+    -> std::enable_if_t<Impl::is_reducer<std::decay_t<Reducer>>::value> {
+  using R = std::decay_t<Reducer>;
+  typename R::value_type acc = R::identity();
+  p.iterate([&](int i) { f(i, acc); });
+  r.value = acc;
+}
+
+// plain-value form: sum semantics, accumulator starts at T()
+template <class Policy, class Functor, class T>
+auto parallel_reduce(const Policy& p, const Functor& f, T& result)
+    -> std::enable_if_t<!Impl::is_reducer<T>::value> {
+  T acc = T();
+  p.iterate([&](int i) { f(i, acc); });
+  result = acc;
+}
+
+template <class Policy, class Functor, class R>
+void parallel_reduce(const std::string&, const Policy& p, const Functor& f,
+                     R&& r) {
+  parallel_reduce(p, f, std::forward<R>(r));
+}
+
+// -- init / fence ----------------------------------------------------------
+inline bool is_initialized() { return Impl::initialized_flag(); }
+inline void initialize(int&, char**) { Impl::initialized_flag() = true; }
+inline void initialize() { Impl::initialized_flag() = true; }
+inline void finalize() { Impl::initialized_flag() = false; }
 inline void fence() {}
 
 }  // namespace Kokkos

@@ -152,8 +152,19 @@ def test_golden_cpp(emitted, graph_name, backend):
         "REGEN_GOLDENS=1")
 
 
-def test_emission_is_deterministic():
-    assert _emit("matmul", "loops") == _emit("matmul", "loops")
+@pytest.mark.parametrize("graph_name,backend",
+                         [("matmul", "loops"), ("fused_mlp", "openmp"),
+                          ("spmv", "xla"), ("paged_swap", "auto")])
+def test_emission_is_byte_deterministic(graph_name, backend):
+    """Two independent compiles of the same graph emit byte-identical
+    text (the ValueNamer walks the graph in op order, weight registration
+    follows the walk, and no set/dict iteration order leaks into the
+    unit) AND match the on-disk golden — so REGEN_GOLDENS=1 on an
+    unchanged tree round-trips to a zero diff."""
+    first, second = _emit(graph_name, backend), _emit(graph_name, backend)
+    assert first == second
+    golden = (GOLDEN_DIR / f"{graph_name}_{backend}.cpp").read_text()
+    assert first == golden
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +216,47 @@ def test_translate_target_spelling(emitted):
         emitted("matmul", "loops")
     assert "using lapis_exec = Kokkos::DefaultExecutionSpace;" in \
         emitted("matmul", "xla")
+    assert "using lapis_exec = Kokkos::OpenMP;" in \
+        emitted("matmul", "openmp")
+
+
+def test_openmp_backend_is_pure_declaration(emitted):
+    """The data-declared openmp backend retargets translate with ZERO
+    dispatch edits: its unit differs from the loops unit only in the
+    declared spellings — the exec-space alias and the hierarchy's level
+    names in IR comments.  Any other diff means translate grew
+    backend-specific logic."""
+    def scrub(text):
+        return (text.replace("Kokkos::OpenMP", "EXEC")
+                    .replace("Kokkos::Serial", "EXEC")
+                    .replace("omp-league", "L0").replace("serial-block", "L1")
+                    .replace("omp-thread", "L1").replace("omp-simd", "L2")
+                    .replace("jnp-vector", "L2").replace("serial", "L0")
+                    .replace("backend: openmp", "backend: B")
+                    .replace("backend: loops", "backend: B"))
+    assert scrub(emitted("matmul", "openmp")) == \
+        scrub(emitted("matmul", "loops"))
+
+
+@pytest.mark.parametrize("backend", _backends())
+def test_cabi_harness_structure(emitted, backend):
+    """Every emitted unit carries the C-ABI differential-testing harness
+    next to `main`: extern "C" lapis_run + the shape/arity/dtype
+    descriptor the ctypes loader (repro.core.native) reads, and an
+    idempotent setup guard so repeat calls through a loaded .so are
+    safe."""
+    text = emitted("spmv", backend)
+    assert 'extern "C" void lapis_run(const float** ins, float** outs)' \
+        in text
+    for fn in ("lapis_num_inputs", "lapis_num_outputs", "lapis_input_rank",
+               "lapis_input_dim", "lapis_input_dtype", "lapis_output_rank",
+               "lapis_output_dim", "lapis_output_dtype", "lapis_setup"):
+        assert f'extern "C"' in text and fn in text
+    # spmv: 4 inputs, int32 (code 1) rowptr/indices before f32 payloads
+    assert "lapis_num_inputs() { return 4; }" in text
+    assert "lapis_run();" not in text            # harness calls entry fn
+    assert "static bool lapis_initialized" in text   # idempotent guard
+    assert "lapis_setup();" in text              # run calls the guard
 
 
 def test_translate_target_hook_overrides_default():
